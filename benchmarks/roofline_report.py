@@ -1,0 +1,107 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.join(HERE, "results", "dryrun")
+
+ARCH_ORDER = ["whisper-small", "mixtral-8x7b", "kimi-k2-1t-a32b",
+              "gemma-2b", "smollm-360m", "glm4-9b", "olmo-1b",
+              "internvl2-1b", "mamba2-130m", "jamba-1.5-large-398b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> dict:
+    out = {}
+    d = os.path.join(DRYRUN, mesh)
+    if not os.path.isdir(d):
+        return out
+    for f in os.listdir(d):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                r = json.load(fh)
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.3f}s"
+
+
+def table(mesh: str) -> str:
+    res = load(mesh)
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "HLO GFLOPs/dev | model/HLO | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = res.get((a, s))
+            if r is None:
+                lines.append(f"| {a} | {s} | — | — | — | *missing* | | | |")
+                continue
+            if "skipped" in r:
+                lines.append(
+                    f"| {a} | {s} | — | — | — | *skipped (full attn)* "
+                    f"| | | |")
+                continue
+            if "error" in r:
+                lines.append(f"| {a} | {s} | — | — | — | **ERROR** | | | "
+                             f"{r['error'][:40]} |")
+                continue
+            t = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            hbm = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("output_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 2**30
+            ratio = r.get("useful_flops_ratio")
+            try:  # recompute with the current (attention-aware) model
+                from repro.config import SHAPES
+                from repro.configs import get_config
+                from repro.launch.roofline import model_flops
+                mf = model_flops(get_config(a), SHAPES[s])
+                if r.get("flops_per_device"):
+                    ratio = (mf / r["n_chips"]) / r["flops_per_device"]
+            except Exception:
+                pass
+            lines.append(
+                f"| {a} | {s} | {fmt_s(t['compute_s'])} | "
+                f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                f"{t['dominant']} | {r['flops_per_device']/1e9:.1f} | "
+                f"{ratio:.2f} | {hbm:.1f}GiB |"
+                if ratio is not None else
+                f"| {a} | {s} | {fmt_s(t['compute_s'])} | "
+                f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                f"{t['dominant']} | {r['flops_per_device']/1e9:.1f} | "
+                f"n/a | {hbm:.1f}GiB |")
+    return "\n".join(lines)
+
+
+def summary(mesh: str) -> dict:
+    res = load(mesh)
+    ok = sum(1 for r in res.values()
+             if "roofline" in r)
+    skip = sum(1 for r in res.values() if "skipped" in r)
+    err = sum(1 for r in res.values() if "error" in r)
+    return {"mesh": mesh, "ok": ok, "skipped": skip, "errors": err,
+            "total": len(res)}
+
+
+def main():
+    for mesh in sorted(os.listdir(DRYRUN)) if os.path.isdir(DRYRUN) \
+            else []:
+        print(f"\n## mesh {mesh}: {summary(mesh)}\n")
+        print(table(mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Recompile one dry-run cell and print the per-computation roofline
+attribution + the heaviest instructions — the 'profile' used by the
+§Perf hypothesis loop.
+
+  PYTHONPATH=src python scripts/analyze_cell.py <arch> <shape> \
+      [--rules NAME] [--attn xla_flash] [--remat none] [--top 15]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import dryrun as DR
+from repro.launch.roofline import (_FULL_INSTR_RE, _SHAPE_RE,
+                                   _split_computations, scan_aware_metrics,
+                                   shape_bytes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--attn", default="xla")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    # monkey-patch run_cell to hand us the HLO
+    hlo_holder = {}
+    orig = DR.scan_aware_metrics
+
+    def capture(text, default_trips=1):
+        hlo_holder["text"] = text
+        return orig(text, default_trips)
+
+    DR.scan_aware_metrics = capture
+    res = DR.run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                      rules_name=args.rules, remat=args.remat,
+                      attn_impl=args.attn)
+    text = hlo_holder["text"]
+    r = res["roofline"]
+    print(f"== {args.arch} × {args.shape} rules={args.rules} "
+          f"attn={args.attn} remat={args.remat}")
+    print(f"compute {r['compute_s']:.3f}s | memory {r['memory_s']:.3f}s "
+          f"| collective {r['collective_s']:.3f}s | dom {r['dominant']}")
+
+    sa = scan_aware_metrics(text, default_trips=1)
+    print("\n-- computations by weighted bytes --")
+    rows = sorted(sa["per_comp"].items(),
+                  key=lambda kv: -kv[1]["bytes"] * kv[1]["mult"])
+    for name, m in rows[:8]:
+        print(f"  {name[:58]:60s} ×{m['mult']:<6.0f} "
+              f"bytes/it={m['bytes']/2**30:8.2f}GiB "
+              f"dotF/it={m['dot_flops']:.3g} coll/it="
+              f"{m['coll']/2**20:.1f}MiB")
+
+    # heaviest instructions inside the top computation
+    comps = _split_computations(text)
+    table = {}
+    for m in _FULL_INSTR_RE.finditer(text):
+        table[m.group(1)] = shape_bytes(m.group(2))
+    top_comp = rows[0][0]
+    print(f"\n-- top instructions in {top_comp[:60]} (bytes in+out) --")
+    instrs = []
+    for m in _FULL_INSTR_RE.finditer(comps[top_comp]):
+        name, ts, op, rest = m.groups()
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast"):
+            continue
+        out_b = shape_bytes(ts)
+        in_b = sum(table.get(ref, 0) for ref in
+                   re.findall(r"%([\w\.\-]+)", rest.split(")")[0]))
+        meta = re.search(r'op_name="([^"]+)"', rest)
+        instrs.append((out_b + in_b, op, ts.strip()[:40] + " " +
+                       (meta.group(1)[-60:] if meta else name)))
+    for b, op, meta in sorted(instrs, reverse=True)[:args.top]:
+        print(f"  {b/2**30:8.2f}GiB {op:18s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

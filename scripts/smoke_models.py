@@ -1,0 +1,44 @@
+import numpy as np, jax, jax.numpy as jnp
+from repro.config import reduced, SHAPES
+from repro.configs import ARCHS, get_config
+from repro.models import api
+
+rng = np.random.default_rng(0)
+B, S = 2, 32
+
+def make_batch(cfg):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.standard_normal((B, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(rng.standard_normal((B, cfg.n_patches, cfg.d_model)).astype(np.float32))
+    return batch
+
+for arch in ARCHS:
+    cfg = reduced(get_config(arch))
+    params = api.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(lambda p: api.loss_fn(p, batch, cfg))(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32)**2) for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(loss)) and np.isfinite(float(gnorm)), arch
+    # prefill + decode == full forward (teacher forcing)
+    n_pre = S - 4
+    pre_batch = dict(batch); pre_batch["tokens"] = batch["tokens"][:, :n_pre]
+    cap = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits_pre, caches = api.prefill(params, pre_batch, cfg, cache_cap=cap)
+    full = api.forward(params, batch, cfg)
+    err0 = float(jnp.max(jnp.abs(logits_pre - full[:, n_pre-1])))
+    errs = [err0]
+    for i in range(4):
+        pos = jnp.int32(n_pre + i)
+        if cfg.family == "vlm":
+            pos = jnp.int32(n_pre + i + cfg.n_patches)
+        tok = batch["tokens"][:, n_pre+i:n_pre+i+1]
+        logits, caches = api.decode_step(params, tok, pos, caches, cfg)
+        if n_pre + i < S - 1:
+            errs.append(float(jnp.max(jnp.abs(logits - full[:, n_pre+i]))))
+    print(f"{arch:24s} loss={float(loss):8.4f} gnorm={float(gnorm):9.3f} params={n_params:9d} decode_err={max(errs):.2e}")
+    assert max(errs) < 2e-3, (arch, errs)
+print("all families OK")

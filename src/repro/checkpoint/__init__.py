@@ -1,0 +1,6 @@
+from repro.checkpoint.deltastore import (DeltaCheckpointStore, DeltaPolicy)
+from repro.checkpoint.history import HistoryLog, tensor_measures
+from repro.checkpoint.io import load_arrays, load_into, save_pytree
+
+__all__ = ["DeltaCheckpointStore", "DeltaPolicy", "HistoryLog",
+           "tensor_measures", "load_arrays", "load_into", "save_pytree"]

@@ -1,0 +1,219 @@
+"""Delta-based checkpointing: the paper's storage model on training
+state (DESIGN.md §3).
+
+Mapping onto the paper:
+
+  graph G            →  training state (param pytree)
+  time unit t        →  training step (one delta per `delta_every` steps)
+  update op (op, t)  →  per-tensor state *transition*, encoded as the
+                        mod-2^w difference of raw bit patterns — exactly
+                        invertible both directions (Definition 5), and
+                        the delta chain is complete (Definition 4): any
+                        logged step is reconstructable bit-exactly
+  SG_tcur + Δ        →  latest state + chain of interval deltas
+  materialized SG_t  →  full checkpoints chosen by the paper's policies
+                        (periodic / op-count / similarity)
+  Theorem 1          →  restore = nearest materialized snapshot (time-
+                        or operation-based selection) + forward/backward
+                        chain application
+
+This is also the fault-tolerance path: crash → select anchor → replay
+chain → resume (runtime/failures.py exercises it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_arrays, load_into, save_pytree
+
+_BITS = {2: np.uint16, 4: np.uint32, 8: np.uint64, 1: np.uint8}
+
+
+def _bit_delta(new: np.ndarray, old: np.ndarray) -> np.ndarray:
+    """Invertible transition encoding: (bits(new) − bits(old)) mod 2^w."""
+    w = new.dtype.itemsize
+    u = _BITS[w]
+    return (new.view(u) - old.view(u)).view(u)
+
+
+def _apply_bits(base: np.ndarray, delta: np.ndarray,
+                forward: bool) -> np.ndarray:
+    u = delta.dtype
+    b = base.view(u)
+    out = (b + delta) if forward else (b - delta)
+    return out.view(base.dtype)
+
+
+@dataclasses.dataclass
+class DeltaPolicy:
+    """When to materialize a full snapshot (paper §2.2 Discussion)."""
+    kind: Literal["periodic", "opcount", "similarity"] = "periodic"
+    period: int = 10            # periodic: every N deltas
+    op_budget: float = 1e9     # opcount: Σ|changed elements| threshold
+    drift: float = 0.05         # similarity: rel. L2 drift threshold
+
+
+class DeltaCheckpointStore:
+    """Current state + invertible delta chain + materialized snapshots.
+
+    Layout under ``root``:
+      manifest.json                — steps, anchors, chain metadata
+      current.npz                  — SG_tcur (latest state)
+      snapshots/step_<n>.npz       — materialized snapshots
+      deltas/d_<a>_<b>.npz         — Δ between logged steps a < b
+    """
+
+    def __init__(self, root: str, policy: DeltaPolicy | None = None):
+        self.root = root
+        self.policy = policy or DeltaPolicy()
+        os.makedirs(os.path.join(root, "snapshots"), exist_ok=True)
+        os.makedirs(os.path.join(root, "deltas"), exist_ok=True)
+        self._manifest_path = os.path.join(root, "manifest.json")
+        if os.path.exists(self._manifest_path):
+            with open(self._manifest_path) as f:
+                self.manifest = json.load(f)
+        else:
+            self.manifest = {"steps": [], "snapshots": [],
+                             "deltas": [], "ops_since_snap": 0.0,
+                             "current_step": None}
+
+    # ------------------------------------------------------------- save
+
+    def _flat(self, tree) -> dict[str, np.ndarray]:
+        from repro.checkpoint.io import _paths_and_leaves
+        return {k: np.asarray(jax.device_get(v))
+                for k, v in _paths_and_leaves(tree)}
+
+    def save(self, step: int, state) -> None:
+        """Log ``state`` at ``step`` (paper Algorithm 3: apply the new
+        interval delta, append it, maybe materialize)."""
+        cur_path = os.path.join(self.root, "current.npz")
+        prev_step = self.manifest["current_step"]
+        flat_new = self._flat(state)
+
+        if prev_step is None:
+            save_pytree(state, cur_path)
+            self._materialize(step, cur_path)
+        else:
+            flat_old = load_arrays(cur_path)
+            deltas = {}
+            changed = 0.0
+            drift_num = 0.0
+            drift_den = 0.0
+            for k, new in flat_new.items():
+                old = flat_old[k]
+                d = _bit_delta(new, old)
+                deltas[k] = d
+                changed += float(np.count_nonzero(d))
+                nf = new.astype(np.float32)
+                of = old.astype(np.float32)
+                drift_num += float(np.sum((nf - of) ** 2))
+                drift_den += float(np.sum(of ** 2))
+            dpath = os.path.join(self.root, "deltas",
+                                 f"d_{prev_step}_{step}.npz")
+            np.savez(dpath, **deltas)
+            self.manifest["deltas"].append([prev_step, step])
+            save_pytree(state, cur_path)
+            self.manifest["ops_since_snap"] += changed
+            if self._should_materialize(drift_num, drift_den):
+                self._materialize(step, cur_path)
+        self.manifest["current_step"] = step
+        self.manifest["steps"].append(step)
+        self._write_manifest()
+
+    def _should_materialize(self, drift_num, drift_den) -> bool:
+        p = self.policy
+        n_since = len(self.manifest["steps"]) - self._last_snap_index()
+        if p.kind == "periodic":
+            return n_since >= p.period
+        if p.kind == "opcount":
+            return self.manifest["ops_since_snap"] >= p.op_budget
+        rel = (drift_num / drift_den) ** 0.5 if drift_den > 0 else 1.0
+        return rel >= p.drift
+
+    def _last_snap_index(self) -> int:
+        if not self.manifest["snapshots"]:
+            return 0
+        last = self.manifest["snapshots"][-1]
+        return self.manifest["steps"].index(last) + 1
+
+    def _materialize(self, step: int, cur_path: str) -> None:
+        import shutil
+        shutil.copy(cur_path,
+                    os.path.join(self.root, "snapshots",
+                                 f"step_{step}.npz"))
+        self.manifest["snapshots"].append(step)
+        self.manifest["ops_since_snap"] = 0.0
+
+    def _write_manifest(self) -> None:
+        with open(self._manifest_path, "w") as f:
+            json.dump(self.manifest, f)
+
+    # ---------------------------------------------------------- restore
+
+    def _chain(self, a: int, b: int) -> list[tuple[int, int, bool]]:
+        """Delta files linking logged steps a → b.
+        Returns [(lo, hi, forward)]."""
+        steps = self.manifest["steps"]
+        ia, ib = steps.index(a), steps.index(b)
+        if ia <= ib:
+            return [(steps[i], steps[i + 1], True)
+                    for i in range(ia, ib)]
+        return [(steps[i - 1], steps[i], False)
+                for i in range(ia, ib, -1)]
+
+    def select_anchor(self, step: int,
+                      method: Literal["time", "ops"] = "ops") -> int:
+        """Paper §2.2: time-based vs operation-based selection among
+        materialized snapshots ∪ {current}."""
+        steps = self.manifest["steps"]
+        anchors = list(self.manifest["snapshots"])
+        if self.manifest["current_step"] is not None:
+            anchors.append(self.manifest["current_step"])
+        if method == "time":
+            costs = [abs(step - a) for a in anchors]
+        else:
+            costs = [abs(steps.index(step) - steps.index(a))
+                     for a in anchors]
+        return anchors[int(np.argmin(costs))]
+
+    def restore(self, step: int, template,
+                method: Literal["time", "ops"] = "ops"):
+        """Reconstruct the state at ``step`` (must be a logged step)."""
+        anchor = self.select_anchor(step, method)
+        if anchor == self.manifest["current_step"]:
+            path = os.path.join(self.root, "current.npz")
+        else:
+            path = os.path.join(self.root, "snapshots",
+                                f"step_{anchor}.npz")
+        flat = load_arrays(path)
+        for (lo, hi, forward) in self._chain(anchor, step):
+            dpath = os.path.join(self.root, "deltas",
+                                 f"d_{lo}_{hi}.npz")
+            with np.load(dpath) as z:
+                for k in z.files:
+                    flat[k] = _apply_bits(flat[k], z[k], forward)
+        # rebuild pytree
+        from repro.checkpoint.io import _paths_and_leaves
+        template_flat = _paths_and_leaves(template)
+        leaves = [jnp.asarray(flat[k]) for k, _ in template_flat]
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def latest_step(self) -> int | None:
+        return self.manifest["current_step"]
+
+    def storage_bytes(self) -> dict:
+        def du(d):
+            t = 0
+            for f in os.listdir(os.path.join(self.root, d)):
+                t += os.path.getsize(os.path.join(self.root, d, f))
+            return t
+        return {"snapshots": du("snapshots"), "deltas": du("deltas")}

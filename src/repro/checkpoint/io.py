@@ -1,0 +1,68 @@
+"""Pytree <-> disk (npz + structure manifest), mesh-agnostic.
+
+Checkpoints are saved as host numpy arrays keyed by tree path; loading
+re-shards onto whatever mesh the restoring job runs (runtime/elastic.py)
+— checkpoints carry logical structure, not device layout.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths_and_leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx)
+            if hasattr(p, "idx") else str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(tree, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {}
+    for key, leaf in _paths_and_leaves(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arrays[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            arrays[key] = arr
+    np.savez(path, **arrays)
+
+
+def load_arrays(path: str) -> dict[str, np.ndarray]:
+    """Flat {tree-path: array} (bf16 round-trip restored)."""
+    out = {}
+    with np.load(path) as z:
+        for k in z.files:
+            arr = z[k]
+            if k.endswith("::bf16"):
+                out[k[:-6]] = arr.view(jnp.bfloat16)
+            else:
+                out[k] = arr
+    return out
+
+
+def load_into(tree_like, path: str):
+    """Load arrays into the structure of ``tree_like`` (shapes/dtypes
+    must match; use jax.eval_shape output as the template)."""
+    arrays = load_arrays(path)
+    flat = _paths_and_leaves(tree_like)
+    leaves = []
+    for key, leaf in flat:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        a = arrays[key]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {a.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(a))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

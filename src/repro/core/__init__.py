@@ -1,0 +1,22 @@
+# The paper's primary contribution: graph deltas for historical queries.
+# Storage model (snapshots + interval deltas), reconstruction (sequential
+# & last-writer-wins), query plans, indexes, materialization, and the
+# distributed (shard_map) engine.
+from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
+                              Delta, concat_deltas, delta_from_numpy,
+                              empty_delta, minimal_delta_between, slice_delta)
+from repro.core.graph import DenseGraph, EdgeGraph, dense_from_numpy, \
+    empty_dense, empty_edge
+from repro.core.index import (NodeIndex, build_node_index,
+                              build_node_index_host, count_window_ops,
+                              gather_node_ops, gather_window, temporal_range)
+from repro.core.materialize import (MaterializationPolicy, MaterializedStore,
+                                    edge_jaccard)
+from repro.core.partial import closure_mask, partial_reconstruct
+from repro.core.plans import Query, applicable_plans, evaluate, two_phase
+from repro.core.reconstruct import (degree_series, node_degree_series,
+                                    reconstruct_at, reconstruct_dense,
+                                    reconstruct_edge, reconstruct_sequential)
+from repro.core.store import Op, TemporalGraphStore
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,176 @@
+"""Graph deltas: time-annotated logs of graph update operations.
+
+This is the paper's Definition 3 (*interval delta*): a set of pairs
+``(op, t)`` recording every update operation applied to the evolving
+graph in ``[t0, tcur]``.  We represent the log as a structure-of-arrays
+with a static capacity so it is a well-formed JAX pytree:
+
+  op[i]   : operation code (ADD_NODE / REM_NODE / ADD_EDGE / REM_EDGE / NOP)
+  u[i]    : first endpoint (== node id for node ops)
+  v[i]    : second endpoint (== u for node ops)
+  slot[i] : persistent identity — node id for node ops, edge-registry id
+            for edge ops.  Mirrors the persistent identifiers of [8]
+            (Marian et al.) that the paper builds on; assigned by the
+            host-side store when the op is ingested.
+  t[i]    : time unit at which the op occurred (non-decreasing)
+
+Entries past ``n_ops`` are padding: ``op == NOP`` and ``t == T_PAD``.
+
+Invertibility (paper Definition 5) is the involution ADD <-> REM, i.e.
+``op ^ 1`` on the op codes below.  Completeness (Definition 4) is a
+property of how the log is written — the store records *every* op, and
+emits ``remEdge`` for every incident edge before a ``remNode`` (the
+paper's invertibility assumption, Section 2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Operation codes. ADD/REM pairs differ in the low bit so that the
+# paper's delta inversion (Definition 5) is ``op ^ 1``.
+ADD_NODE = 0
+REM_NODE = 1
+ADD_EDGE = 2
+REM_EDGE = 3
+NOP = 4
+
+# Padding timestamp (must sort after every real timestamp).
+T_PAD = np.iinfo(np.int32).max
+
+OP_NAMES = {ADD_NODE: "addNode", REM_NODE: "remNode",
+            ADD_EDGE: "addEdge", REM_EDGE: "remEdge", NOP: "nop"}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Delta:
+    """An interval delta Δ_{[t0, tcur]} (paper Definition 3)."""
+
+    op: jax.Array    # i32[M]
+    u: jax.Array     # i32[M]
+    v: jax.Array     # i32[M]
+    slot: jax.Array  # i32[M]
+    t: jax.Array     # i32[M]
+    n_ops: jax.Array  # i32[] — number of valid (non-padding) entries
+
+    @property
+    def capacity(self) -> int:
+        return self.op.shape[0]
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.n_ops
+
+    def is_edge_op(self) -> jax.Array:
+        return (self.op == ADD_EDGE) | (self.op == REM_EDGE)
+
+    def is_node_op(self) -> jax.Array:
+        return (self.op == ADD_NODE) | (self.op == REM_NODE)
+
+    def invert(self) -> "Delta":
+        """Inverted delta (paper Definition 5): ADD <-> REM per op."""
+        inv = jnp.where(self.op == NOP, self.op, self.op ^ 1)
+        return dataclasses.replace(self, op=inv)
+
+    def window_mask(self, t_lo, t_hi) -> jax.Array:
+        """Mask of ops with t in the half-open interval (t_lo, t_hi]."""
+        return (self.t > t_lo) & (self.t <= t_hi) & (self.op != NOP)
+
+
+def empty_delta(capacity: int) -> Delta:
+    return Delta(
+        op=jnp.full((capacity,), NOP, dtype=jnp.int32),
+        u=jnp.zeros((capacity,), dtype=jnp.int32),
+        v=jnp.zeros((capacity,), dtype=jnp.int32),
+        slot=jnp.zeros((capacity,), dtype=jnp.int32),
+        t=jnp.full((capacity,), T_PAD, dtype=jnp.int32),
+        n_ops=jnp.int32(0),
+    )
+
+
+def delta_from_numpy(op, u, v, slot, t, capacity: int | None = None) -> Delta:
+    """Build a device Delta from host (numpy) op arrays, padding to capacity."""
+    op = np.asarray(op, np.int32)
+    n = op.shape[0]
+    cap = capacity if capacity is not None else max(int(n), 1)
+    if cap < n:
+        raise ValueError(f"capacity {cap} < n_ops {n}")
+
+    def pad(x, fill):
+        out = np.full((cap,), fill, np.int32)
+        out[:n] = np.asarray(x, np.int32)
+        return jnp.asarray(out)
+
+    return Delta(op=pad(op, NOP), u=pad(u, 0), v=pad(v, 0),
+                 slot=pad(slot, 0), t=pad(t, T_PAD), n_ops=jnp.int32(n))
+
+
+def concat_deltas(a: Delta, b: Delta, capacity: int | None = None) -> Delta:
+    """Append delta ``b`` after ``a`` (paper Algorithm 3, line 8).
+
+    Host-level helper: capacities are static, so appending produces a new
+    Delta with capacity ``cap(a) + cap(b)`` (or the given capacity).
+    Assumes a's timestamps precede b's.
+    """
+    cap = capacity if capacity is not None else a.capacity + b.capacity
+    na, nb = int(a.n_ops), int(b.n_ops)
+    if cap < na + nb:
+        raise ValueError("concat capacity too small")
+
+    def cat(xa, xb, fill):
+        out = np.full((cap,), fill, np.int32)
+        out[:na] = np.asarray(xa)[:na]
+        out[na:na + nb] = np.asarray(xb)[:nb]
+        return jnp.asarray(out)
+
+    return Delta(op=cat(a.op, b.op, NOP), u=cat(a.u, b.u, 0),
+                 v=cat(a.v, b.v, 0), slot=cat(a.slot, b.slot, 0),
+                 t=cat(a.t, b.t, T_PAD), n_ops=jnp.int32(na + nb))
+
+
+def slice_delta(d: Delta, t_lo, t_hi) -> Delta:
+    """Host-level restriction of a delta to ops with t in (t_lo, t_hi]."""
+    op = np.asarray(d.op)
+    t = np.asarray(d.t)
+    keep = (t > int(t_lo)) & (t <= int(t_hi)) & (op != NOP)
+    idx = np.nonzero(keep)[0]
+    return delta_from_numpy(op[idx], np.asarray(d.u)[idx], np.asarray(d.v)[idx],
+                            np.asarray(d.slot)[idx], t[idx])
+
+
+def minimal_delta_between(mask_a: np.ndarray, adj_a: np.ndarray,
+                          mask_b: np.ndarray, adj_b: np.ndarray,
+                          t: int) -> Tuple[np.ndarray, ...]:
+    """The *minimal* delta of paper Definition 2 / Lemma 1.
+
+    Given two snapshots (node masks + dense adjacency), emit exactly the
+    operations required to turn A into B: unique and minimal, used by
+    tests to validate Lemma 1 against logged (redundant) interval deltas.
+    Returns host arrays (op, u, v, t).
+    """
+    ops, us, vs = [], [], []
+    add_nodes = np.nonzero(~mask_a & mask_b)[0]
+    rem_nodes = np.nonzero(mask_a & ~mask_b)[0]
+    iu, iv = np.triu_indices(adj_a.shape[0], k=1)
+    ea = adj_a[iu, iv]
+    eb = adj_b[iu, iv]
+    add_e = np.nonzero(~ea & eb)[0]
+    # Def. 2(4): remEdge only when both endpoints survive in B; edges
+    # dropped because an endpoint was removed are implied by remNode.
+    both_live = mask_b[iu] & mask_b[iv]
+    rem_e = np.nonzero(ea & ~eb & both_live)[0]
+    for n in add_nodes:
+        ops.append(ADD_NODE); us.append(n); vs.append(n)
+    for e in add_e:
+        ops.append(ADD_EDGE); us.append(iu[e]); vs.append(iv[e])
+    for e in rem_e:
+        ops.append(REM_EDGE); us.append(iu[e]); vs.append(iv[e])
+    for n in rem_nodes:
+        ops.append(REM_NODE); us.append(n); vs.append(n)
+    ts = np.full((len(ops),), t, np.int32)
+    return (np.asarray(ops, np.int32), np.asarray(us, np.int32),
+            np.asarray(vs, np.int32), ts)

@@ -1,0 +1,196 @@
+"""Distributed temporal-graph engine (DESIGN.md §2.4).
+
+The paper names parallel snapshot reconstruction (à la Pregel/GBASE) as
+future work; here it is.  Layout:
+
+* adjacency rows + node mask sharded over a 1-D ``rows`` mesh axis
+  (over *all* chips: ``pod × data × model`` collapse to one axis for the
+  graph engine),
+* the delta log replicated (it is tiny next to N²) — or time-sharded
+  across pods for range scans,
+* reconstruction is row-parallel (zero communication),
+* global measures psum partial aggregates,
+* batched query serving evaluates hybrid plans on the shard that owns
+  the queried row and combines with psum.
+
+All functions are shard_map programs over an existing mesh; they make no
+assumption about the device count (tests run them on 8 host devices, the
+production mesh on 512).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from repro.core.delta import ADD_EDGE, Delta
+from repro.core.graph import DenseGraph
+from repro.core.reconstruct import _lww_decide
+
+AXIS = "rows"
+
+
+def graph_mesh(devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    return Mesh(devices, (AXIS,))
+
+
+def shard_graph(g: DenseGraph, mesh: Mesh) -> DenseGraph:
+    """Place adjacency rows / node mask row-sharded on the mesh."""
+    adj = jax.device_put(g.adj, NamedSharding(mesh, P(AXIS, None)))
+    nodes = jax.device_put(g.nodes, NamedSharding(mesh, P(AXIS)))
+    return DenseGraph(nodes=nodes, adj=adj)
+
+
+def replicate(x, mesh: Mesh):
+    return jax.device_put(x, NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
+# Row-parallel reconstruction
+# ---------------------------------------------------------------------------
+
+
+def _local_lww(nodes_l, adj_l, delta: Delta, t_anchor, t_query):
+    """Shard-local last-writer-wins over the local row block."""
+    n_loc = adj_l.shape[0]
+    m = delta.capacity
+    row0 = jax.lax.axis_index(AXIS) * n_loc
+    forward = t_query >= t_anchor
+    t_lo = jnp.minimum(t_anchor, t_query)
+    t_hi = jnp.maximum(t_anchor, t_query)
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    idx = jnp.arange(m, dtype=jnp.int32)
+
+    # Edge op (u, v) lands in local row u (col v) and local row v (col u).
+    e_win = in_win & delta.is_edge_op()
+    first = jnp.full((n_loc, adj_l.shape[1]), m, jnp.int32)
+    last = jnp.full((n_loc, adj_l.shape[1]), -1, jnp.int32)
+    for (r, c) in ((delta.u, delta.v), (delta.v, delta.u)):
+        lr = r - row0
+        ok = e_win & (lr >= 0) & (lr < n_loc)
+        lr = jnp.clip(lr, 0, n_loc - 1)
+        first = first.at[lr, c].min(jnp.where(ok, idx, m))
+        last = last.at[lr, c].max(jnp.where(ok, idx, -1))
+    dec, val = _lww_decide(first, last, delta.op, forward, m, ADD_EDGE)
+    adj_l = jnp.where(dec, val, adj_l)
+
+    n_win = in_win & delta.is_node_op()
+    ln = delta.u - row0
+    ok = n_win & (ln >= 0) & (ln < n_loc)
+    ln = jnp.clip(ln, 0, n_loc - 1)
+    firstn = jnp.full((n_loc,), m, jnp.int32).at[ln].min(
+        jnp.where(ok, idx, m))
+    lastn = jnp.full((n_loc,), -1, jnp.int32).at[ln].max(
+        jnp.where(ok, idx, -1))
+    dec_n, val_n = _lww_decide(firstn, lastn, delta.op, forward, m, 0)
+    nodes_l = jnp.where(dec_n, val_n, nodes_l)
+    return nodes_l, adj_l
+
+
+def dist_reconstruct(mesh: Mesh, current: DenseGraph, delta: Delta,
+                     t_anchor, t_query) -> DenseGraph:
+    """SG_{t_query} with rows reconstructed in parallel, no comms."""
+    fn = shard_map(
+        _local_lww, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS, None), P(), P(), P()),
+        out_specs=(P(AXIS), P(AXIS, None)))
+    nodes, adj = jax.jit(fn)(current.nodes, current.adj, delta,
+                             t_anchor, t_query)
+    return DenseGraph(nodes=nodes, adj=adj)
+
+
+# ---------------------------------------------------------------------------
+# Global measures with psum combination
+# ---------------------------------------------------------------------------
+
+
+def dist_num_edges(mesh: Mesh, g: DenseGraph):
+    def f(adj_l):
+        local = jnp.sum(adj_l.astype(jnp.int32))
+        return jax.lax.psum(local, AXIS)[None] // 2
+
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=(P(AXIS, None),),
+                             out_specs=P(AXIS)))(g.adj)[0]
+
+
+def dist_degrees(mesh: Mesh, g: DenseGraph) -> jax.Array:
+    def f(adj_l):
+        return jnp.sum(adj_l, axis=1).astype(jnp.int32)
+
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=(P(AXIS, None),),
+                             out_specs=P(AXIS)))(g.adj)
+
+
+def dist_degree_distribution(mesh: Mesh, g: DenseGraph, max_deg: int):
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(AXIS), P(AXIS, None)), out_specs=P(AXIS))
+    def f(nodes_l, adj_l):
+        deg = jnp.clip(jnp.sum(adj_l, axis=1).astype(jnp.int32), 0, max_deg)
+        hist = jnp.zeros((max_deg + 1,), jnp.int32).at[deg].add(
+            nodes_l.astype(jnp.int32))
+        total = jax.lax.psum(hist, AXIS)
+        # every shard holds the full histogram; emit only shard 0's copy
+        keep = jax.lax.axis_index(AXIS) == 0
+        return jnp.where(keep, total, 0)
+
+    parts = jax.jit(f)(g.nodes, g.adj)
+    return parts.reshape(len(mesh.devices), -1).sum(axis=0)
+
+
+def dist_triangles(mesh: Mesh, g: DenseGraph):
+    """trace(A³)/6 with row-sharded A: local A_l @ A_full (MXU), then
+    elementwise with A_l, psum."""
+    @partial(shard_map, mesh=mesh, in_specs=(P(AXIS, None),),
+             out_specs=P(AXIS))
+    def f(adj_l):
+        a_l = adj_l.astype(jnp.float32)
+        a_full = jax.lax.all_gather(a_l, AXIS, tiled=True)
+        m = a_l @ a_full
+        contrib = jnp.sum(m * a_l)
+        return jax.lax.psum(contrib, AXIS)[None]
+
+    return (jax.jit(f)(g.adj)[0] / 6.0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Batched historical query serving (hybrid plan, DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+
+
+def dist_batch_point_degree(mesh: Mesh, current: DenseGraph, delta: Delta,
+                            vs: jax.Array, ts: jax.Array, t_cur):
+    """Serve a batch of point node-centric degree queries:
+    degree(vs[i]) at time ts[i].  Current-degree partials come from the
+    owning shard (psum); the delta correction is computed redundantly on
+    every shard (the log is replicated and the correction is O(B·M) int
+    math)."""
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P(AXIS, None), P(), P(), P(), P()),
+             out_specs=P())
+    def f(adj_l, delta, vs, ts, t_cur):
+        n_loc = adj_l.shape[0]
+        row0 = jax.lax.axis_index(AXIS) * n_loc
+        lv = vs - row0
+        ok = (lv >= 0) & (lv < n_loc)
+        lv = jnp.clip(lv, 0, n_loc - 1)
+        deg_local = jnp.where(ok, jnp.sum(adj_l[lv], axis=1), 0)
+        deg_cur = jax.lax.psum(deg_local.astype(jnp.int32), AXIS)
+
+        win = (delta.t[None, :] > ts[:, None]) & \
+              (delta.t[None, :] <= t_cur) & delta.valid_mask()[None, :]
+        touch = (delta.u[None, :] == vs[:, None]) | \
+                (delta.v[None, :] == vs[:, None])
+        sign = jnp.where(delta.op == ADD_EDGE, 1,
+                         jnp.where(delta.is_edge_op(), -1, 0))[None, :]
+        corr = jnp.sum(sign * (win & touch).astype(jnp.int32), axis=1)
+        return deg_cur - corr
+
+    return jax.jit(f)(current.adj, delta, vs, ts, t_cur)

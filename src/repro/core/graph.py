@@ -1,0 +1,148 @@
+"""Graph snapshots (paper Definition 1) in two TPU-native layouts.
+
+The paper stores snapshots in Neo4j (pointer adjacency).  On TPU we use
+dense arrays instead (DESIGN.md §2.1):
+
+* ``DenseGraph`` — node-validity mask ``bool[N]`` + adjacency bitmask
+  ``bool[N, N]``.  Global queries become MXU matmuls (BFS = boolean
+  frontier products, triangles = trace(A³), PageRank = power iteration).
+  Right layout up to a few 10⁴ nodes (the paper's own scale is 5,063).
+
+* ``EdgeGraph`` — persistent edge registry ``(eu, ev)[E]`` + validity
+  masks.  Reconstruction scatters over 1-D edge slots; measures are
+  segment reductions.  Right layout for large sparse graphs and for the
+  row/slot-sharded distributed engine.
+
+Both are immutable pytrees; "applying" a delta produces a new snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseGraph:
+    """SG_t as node mask + dense symmetric adjacency."""
+
+    nodes: jax.Array  # bool[N]
+    adj: jax.Array    # bool[N, N], symmetric, zero diagonal
+
+    @property
+    def n_cap(self) -> int:
+        return self.nodes.shape[0]
+
+    def num_nodes(self) -> jax.Array:
+        return jnp.sum(self.nodes.astype(jnp.int32))
+
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.adj.astype(jnp.int32)) // 2
+
+    def degrees(self) -> jax.Array:
+        """Degree of every node (0 for invalid nodes)."""
+        return jnp.sum(self.adj, axis=1).astype(jnp.int32)
+
+    def degree(self, v) -> jax.Array:
+        return jnp.sum(self.adj[v]).astype(jnp.int32)
+
+    def neighbors_mask(self, v) -> jax.Array:
+        return self.adj[v]
+
+    def induced(self, node_mask: jax.Array) -> "DenseGraph":
+        m = node_mask & self.nodes
+        return DenseGraph(nodes=m, adj=self.adj & m[:, None] & m[None, :])
+
+    def validate(self) -> jax.Array:
+        """True iff structurally consistent (edges only between valid
+        nodes, symmetric, zero diagonal)."""
+        ok_sym = jnp.all(self.adj == self.adj.T)
+        ok_diag = ~jnp.any(jnp.diagonal(self.adj))
+        live = self.nodes[:, None] & self.nodes[None, :]
+        ok_live = ~jnp.any(self.adj & ~live)
+        return ok_sym & ok_diag & ok_live
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeGraph:
+    """SG_t as a persistent edge registry + validity masks.
+
+    ``eu/ev`` are fixed once an edge slot is registered (host side); only
+    the masks evolve.  Slots past ``n_edges_reg`` are unregistered.
+    """
+
+    nodes: jax.Array        # bool[N]
+    eu: jax.Array           # i32[E] — endpoint 1 per registered edge slot
+    ev: jax.Array           # i32[E] — endpoint 2
+    emask: jax.Array        # bool[E] — edge validity
+    n_edges_reg: jax.Array  # i32[] — number of registered slots
+
+    @property
+    def n_cap(self) -> int:
+        return self.nodes.shape[0]
+
+    @property
+    def e_cap(self) -> int:
+        return self.eu.shape[0]
+
+    def reg_mask(self) -> jax.Array:
+        return jnp.arange(self.e_cap, dtype=jnp.int32) < self.n_edges_reg
+
+    def live_edges(self) -> jax.Array:
+        return self.emask & self.reg_mask()
+
+    def num_nodes(self) -> jax.Array:
+        return jnp.sum(self.nodes.astype(jnp.int32))
+
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.live_edges().astype(jnp.int32))
+
+    def degrees(self) -> jax.Array:
+        live = self.live_edges()
+        ones = live.astype(jnp.int32)
+        deg = jnp.zeros((self.n_cap,), jnp.int32)
+        deg = deg.at[self.eu].add(ones)
+        deg = deg.at[self.ev].add(ones)
+        return deg
+
+    def degree(self, v) -> jax.Array:
+        live = self.live_edges()
+        touch = ((self.eu == v) | (self.ev == v)) & live
+        return jnp.sum(touch.astype(jnp.int32))
+
+    def to_dense(self) -> DenseGraph:
+        adj = jnp.zeros((self.n_cap, self.n_cap), bool)
+        live = self.live_edges()
+        adj = adj.at[self.eu, self.ev].max(live)
+        adj = adj.at[self.ev, self.eu].max(live)
+        return DenseGraph(nodes=self.nodes, adj=adj)
+
+
+def empty_dense(n_cap: int) -> DenseGraph:
+    return DenseGraph(nodes=jnp.zeros((n_cap,), bool),
+                      adj=jnp.zeros((n_cap, n_cap), bool))
+
+
+def empty_edge(n_cap: int, e_cap: int) -> EdgeGraph:
+    return EdgeGraph(nodes=jnp.zeros((n_cap,), bool),
+                     eu=jnp.zeros((e_cap,), jnp.int32),
+                     ev=jnp.zeros((e_cap,), jnp.int32),
+                     emask=jnp.zeros((e_cap,), bool),
+                     n_edges_reg=jnp.int32(0))
+
+
+def dense_from_numpy(nodes: np.ndarray, edges: list[tuple[int, int]],
+                     n_cap: int | None = None) -> DenseGraph:
+    nodes = np.asarray(nodes, bool)
+    n = n_cap or nodes.shape[0]
+    mask = np.zeros((n,), bool)
+    mask[:nodes.shape[0]] = nodes
+    adj = np.zeros((n, n), bool)
+    for (a, b) in edges:
+        adj[a, b] = adj[b, a] = True
+    np.fill_diagonal(adj, False)
+    return DenseGraph(nodes=jnp.asarray(mask), adj=jnp.asarray(adj))

@@ -1,0 +1,163 @@
+"""Delta indexes (paper §3.3.2): temporal and node-centric.
+
+*Temporal index* — the delta is append-only and time-sorted, so the
+index is binary search over the ``t`` column (``searchsorted``): a query
+window [t_k, t_l] maps to a contiguous op range.  Plans then touch only
+``O(window)`` ops (via ``dynamic_slice`` with a static capacity) instead
+of masking the whole log.
+
+*Node-centric index* — CSR over nodes: for every node, the sorted list
+of op indices that touch it (edge ops are listed under both endpoints).
+Built with one argsort; lookups are gathers.  Powers delta-only/hybrid
+plans on single nodes and partial reconstruction (paper §3.3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta import Delta, NOP, T_PAD
+
+
+# ---------------------------------------------------------------------------
+# Temporal index
+# ---------------------------------------------------------------------------
+
+
+def temporal_range(delta: Delta, t_lo, t_hi):
+    """Op-index range [i0, i1) of ops with t in (t_lo, t_hi].
+
+    O(log M) binary search — the temporal index. Padding entries sort to
+    the end (t == T_PAD).
+    """
+    i0 = jnp.searchsorted(delta.t, t_lo, side="right")
+    i1 = jnp.searchsorted(delta.t, t_hi, side="right")
+    return i0.astype(jnp.int32), i1.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("window_cap",))
+def gather_window(delta: Delta, t_lo, t_hi, window_cap: int) -> Delta:
+    """Materialize the ops of (t_lo, t_hi] into a Delta of static
+    capacity ``window_cap`` via the temporal index (dynamic_slice).
+
+    Ops beyond ``window_cap`` are dropped — callers size the capacity
+    from host-side knowledge (store tracks ops/time-unit).
+    """
+    i0, i1 = temporal_range(delta, t_lo, t_hi)
+    n = jnp.minimum(i1 - i0, window_cap)
+
+    def slice1(x, fill):
+        y = jax.lax.dynamic_slice_in_dim(x, i0, window_cap)
+        keep = jnp.arange(window_cap, dtype=jnp.int32) < n
+        return jnp.where(keep, y, fill)
+
+    return Delta(op=slice1(delta.op, NOP), u=slice1(delta.u, 0),
+                 v=slice1(delta.v, 0), slot=slice1(delta.slot, 0),
+                 t=slice1(delta.t, T_PAD), n_ops=n)
+
+
+def count_window_ops(delta: Delta, t_lo, t_hi):
+    """#ops in (t_lo, t_hi] — the operation-based selection metric
+    (paper §2.2) at O(log M)."""
+    i0, i1 = temporal_range(delta, t_lo, t_hi)
+    return i1 - i0
+
+
+# ---------------------------------------------------------------------------
+# Node-centric index (CSR)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NodeIndex:
+    """CSR: ops touching each node. Edge ops appear twice (once per
+    endpoint); node ops once."""
+
+    row_ptr: jax.Array   # i32[N + 1]
+    op_idx: jax.Array    # i32[2M] — delta op indices, grouped by node,
+                         # time-ordered within a node (stable sort)
+    n_cap: int = dataclasses.field(metadata=dict(static=True))
+
+    def ops_of(self, v, cap: int):
+        """Up to ``cap`` op indices touching node v (padded with -1).
+
+        Explicit gather (not dynamic_slice — slice-start clamping near
+        the array end would silently shift the window)."""
+        start = self.row_ptr[v]
+        count = self.row_ptr[v + 1] - start
+        ids = start + jnp.arange(cap, dtype=jnp.int32)
+        safe = jnp.clip(ids, 0, self.op_idx.shape[0] - 1)
+        keep = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(count, cap)
+        return jnp.where(keep, self.op_idx[safe], -1), \
+            jnp.minimum(count, cap)
+
+
+def build_node_index(delta: Delta, n_cap: int) -> NodeIndex:
+    """Build the CSR node-centric index with one stable argsort.
+
+    Pure-JAX build (shardable); the store calls this after appends.
+    Padding ops are parked under a virtual row ``n_cap`` and truncated.
+    """
+    m = delta.capacity
+    valid = delta.valid_mask() & (delta.op != NOP)
+    is_edge = delta.is_edge_op()
+    # Two entries per op, *interleaved* (u0, v0, u1, v1, ...) so that a
+    # stable sort by node keeps each node's op list in time order.
+    key_u = jnp.where(valid, delta.u, n_cap)
+    key_v = jnp.where(valid & is_edge, delta.v, n_cap)
+    keys = jnp.stack([key_u, key_v], axis=1).reshape(-1)   # i32[2M]
+    idxs = jnp.repeat(jnp.arange(m, dtype=jnp.int32), 2)
+    order = jnp.argsort(keys, stable=True)
+    sorted_keys = keys[order]
+    op_idx = idxs[order]
+    counts = jnp.zeros((n_cap + 1,), jnp.int32).at[
+        jnp.clip(sorted_keys, 0, n_cap)].add(1)
+    row_ptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts[:n_cap])])
+    return NodeIndex(row_ptr=row_ptr, op_idx=op_idx, n_cap=n_cap)
+
+
+def build_node_index_host(delta: Delta, n_cap: int) -> NodeIndex:
+    """Numpy build (used by the host-side store for large logs)."""
+    op = np.asarray(delta.op)
+    m = op.shape[0]
+    valid = (np.arange(m) < int(delta.n_ops)) & (op != NOP)
+    is_edge = (op == 2) | (op == 3)
+    u = np.asarray(delta.u)
+    v = np.asarray(delta.v)
+    keys = np.stack([np.where(valid, u, n_cap),
+                     np.where(valid & is_edge, v, n_cap)],
+                    axis=1).reshape(-1)
+    idxs = np.repeat(np.arange(m, dtype=np.int32), 2)
+    order = np.argsort(keys, kind="stable")
+    sorted_keys = keys[order]
+    op_idx = idxs[order].astype(np.int32)
+    counts = np.bincount(np.clip(sorted_keys, 0, n_cap),
+                         minlength=n_cap + 1)
+    row_ptr = np.concatenate([[0], np.cumsum(counts[:n_cap])]).astype(
+        np.int32)
+    return NodeIndex(row_ptr=jnp.asarray(row_ptr), op_idx=jnp.asarray(op_idx),
+                     n_cap=n_cap)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def gather_node_ops(delta: Delta, index: NodeIndex, v, cap: int) -> Delta:
+    """Delta restricted to ops touching node v, via the node index.
+
+    O(deg_ops) gathers instead of an O(M) scan — this is what makes the
+    ``-index`` plan variants of the paper's Figure 1 fast.
+    """
+    ids, n = index.ops_of(v, cap)
+    safe = jnp.clip(ids, 0)
+    good = ids >= 0
+
+    def g(x, fill):
+        return jnp.where(good, x[safe], fill)
+
+    return Delta(op=g(delta.op, NOP), u=g(delta.u, 0), v=g(delta.v, 0),
+                 slot=g(delta.slot, 0), t=g(delta.t, T_PAD), n_ops=n)

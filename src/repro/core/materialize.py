@@ -1,0 +1,83 @@
+"""Materialized snapshots (paper §2.2): when to take them, which to use.
+
+Selection (given the sequence S of materialized snapshots):
+* time-based       — argmin |t_k − t_l| (cheap, wrong under bursty logs)
+* operation-based  — argmin #ops(Δ between t_l and t_k); exact cost
+  proxy, computed in O(log M) per candidate via the temporal index.
+
+Materialization policies (when to take the next snapshot):
+* periodic    — every P time units
+* op-count    — after B ops have accumulated since the last snapshot
+* similarity  — when Jaccard similarity of edge sets vs the last
+  materialized snapshot drops below a threshold (the paper's point that
+  op-count and similarity differ: self-reversing ops inflate the former)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta import Delta
+from repro.core.graph import DenseGraph
+from repro.core.index import count_window_ops
+
+
+@dataclasses.dataclass
+class MaterializedStore:
+    """Host-side sequence S = (SG_{t_1}, ..., SG_{t_m}, SG_{t_cur})."""
+
+    times: list[int] = dataclasses.field(default_factory=list)
+    snapshots: list[DenseGraph] = dataclasses.field(default_factory=list)
+
+    def add(self, t: int, g: DenseGraph) -> None:
+        self.times.append(int(t))
+        self.snapshots.append(g)
+
+    def select(self, t_k: int, delta: Delta,
+               method: Literal["time", "ops"] = "ops"):
+        """Pick the anchor snapshot for reconstructing SG_{t_k}.
+
+        Returns (t_anchor, snapshot).  ``method='time'`` is the paper's
+        time-based selection; ``'ops'`` is operation-based (optimal #ops
+        applied), priced with the temporal index.
+        """
+        if not self.times:
+            raise ValueError("no materialized snapshots")
+        if method == "time":
+            costs = [abs(t_k - tl) for tl in self.times]
+        else:
+            costs = [int(count_window_ops(delta, min(tl, t_k),
+                                          max(tl, t_k)))
+                     for tl in self.times]
+        best = int(np.argmin(costs))
+        return self.times[best], self.snapshots[best]
+
+
+@dataclasses.dataclass
+class MaterializationPolicy:
+    """Decides whether to materialize after each update batch."""
+
+    kind: Literal["periodic", "opcount", "similarity"] = "opcount"
+    period: int = 100            # periodic: time units between snapshots
+    op_budget: int = 5000        # opcount: ops since last snapshot
+    min_similarity: float = 0.8  # similarity: Jaccard threshold
+
+    def should_materialize(self, *, t_now: int, t_last: int,
+                           ops_since: int, current: DenseGraph,
+                           last: DenseGraph | None) -> bool:
+        if self.kind == "periodic":
+            return (t_now - t_last) >= self.period
+        if self.kind == "opcount":
+            return ops_since >= self.op_budget
+        if last is None:
+            return True
+        return float(edge_jaccard(current, last)) < self.min_similarity
+
+
+def edge_jaccard(a: DenseGraph, b: DenseGraph):
+    inter = jnp.sum((a.adj & b.adj).astype(jnp.int32))
+    union = jnp.sum((a.adj | b.adj).astype(jnp.int32))
+    return jnp.where(union > 0, inter / union, 1.0)

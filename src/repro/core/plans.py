@@ -1,0 +1,230 @@
+"""Historical-query plans (paper §3.2, Table 2).
+
+Query taxonomy: {point, range-differential, range-aggregate} ×
+{node-centric, global}.  Plans:
+
+* two-phase  — reconstruct snapshot(s), then measure (all query types)
+* delta-only — range-differential node-centric, straight off the log
+* hybrid     — point / range-aggregate node-centric: one measure on
+  SG_tcur + a corrective pass over the window's ops
+
+Each plan comes in an unindexed variant (mask the whole log) and an
+indexed variant (temporal index → windowed slice; node-centric index →
+per-node op list) — the four curves of the paper's Figure 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import ADD_EDGE, REM_EDGE, Delta
+from repro.core.graph import DenseGraph
+from repro.core.index import NodeIndex, gather_node_ops, gather_window
+from repro.core.partial import partial_reconstruct
+from repro.core.queries import GLOBAL_MEASURES, NODE_MEASURES
+from repro.core.reconstruct import (node_degree_series, reconstruct_dense,
+                                    reconstruct_sequential)
+
+Aggregate = Literal["mean", "min", "max"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """A historical query (paper Table 1)."""
+
+    kind: Literal["point", "diff", "agg"]
+    scope: Literal["node", "global"]
+    measure: str                  # key into NODE_MEASURES / GLOBAL_MEASURES
+    t_k: int                      # point time, or range start
+    t_l: int | None = None        # range end (diff/agg)
+    v: int | None = None          # node (node-centric)
+    agg: Aggregate = "mean"
+
+
+def _measure(g: DenseGraph, q: Query):
+    if q.scope == "node":
+        return NODE_MEASURES[q.measure](g, q.v)
+    return GLOBAL_MEASURES[q.measure](g)
+
+
+def _aggregate(vals: jax.Array, agg: Aggregate):
+    if agg == "mean":
+        return jnp.mean(vals.astype(jnp.float32))
+    return jnp.min(vals) if agg == "min" else jnp.max(vals)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase plan (paper §3.2.1) — reconstruct, then evaluate
+# ---------------------------------------------------------------------------
+
+
+def two_phase(current: DenseGraph, delta: Delta, t_cur, q: Query, *,
+              partial_rows: bool = False, sequential: bool = False,
+              passes: int = 2):
+    """General plan, all query types.
+
+    ``sequential=True`` replays the paper's Algorithm 2 op-by-op (the
+    faithful baseline); otherwise the vectorized LWW reconstruction.
+    ``partial_rows=True`` enables partial reconstruction (§3.3.1) for
+    node-centric queries.
+    """
+    def recon(t):
+        if sequential:
+            return reconstruct_sequential(current, delta, t_cur, t)
+        if partial_rows and q.scope == "node":
+            seed = jnp.zeros((current.n_cap,), bool).at[q.v].set(True)
+            return partial_reconstruct(current, delta, t_cur, t, seed,
+                                       passes=passes)
+        return reconstruct_dense(current, delta, t_cur, t)
+
+    if q.kind == "point":
+        return _measure(recon(q.t_k), q)
+
+    if q.kind == "diff":
+        # Reconstruct SG_tl backward from current, then SG_tk backward
+        # from SG_tl — reusing the nearer snapshot exactly as the paper's
+        # point-range plan does (§3.2.1), so the shared part of the delta
+        # is applied once.
+        g_l = recon(q.t_l)
+        if sequential:
+            g_k = reconstruct_sequential(g_l, delta, q.t_l, q.t_k)
+        else:
+            g_k = reconstruct_dense(g_l, delta, q.t_l, q.t_k)
+        return jnp.abs(_measure(g_l, q) - _measure(g_k, q))
+
+    # aggregate: one snapshot per time unit in [t_k, t_l]
+    ts = jnp.arange(q.t_k, q.t_l + 1, dtype=jnp.int32)
+    vals = jax.lax.map(lambda t: _measure(recon(t), q), ts)
+    return _aggregate(vals, q.agg)
+
+
+# ---------------------------------------------------------------------------
+# Delta-only plan (paper §3.2.2) — range-differential node-centric
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def delta_only_degree_diff(delta: Delta, v, t_k, t_l):
+    """|Δdegree(v)| over [t_k, t_l] by counting add/rem edge ops that
+    touch v — no snapshot access at all."""
+    win = delta.window_mask(t_k, t_l) & delta.valid_mask()
+    touch = win & ((delta.u == v) | (delta.v == v))
+    sign = jnp.where(delta.op == ADD_EDGE, 1,
+                     jnp.where(delta.op == REM_EDGE, -1, 0))
+    return jnp.abs(jnp.sum(sign * touch.astype(jnp.int32)))
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def delta_only_degree_diff_indexed(delta: Delta, index: NodeIndex, v,
+                                   t_k, t_l, cap: int):
+    """Same, via the node-centric index: O(deg_ops) gathers."""
+    sub = gather_node_ops(delta, index, v, cap)
+    return delta_only_degree_diff(sub, v, t_k, t_l)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid plan (paper §3.2.3) — point / aggregate node-centric
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def hybrid_point_degree(current: DenseGraph, delta: Delta, v, t_k, t_cur):
+    """degree(v) at t_k = degree on SG_tcur − net additions in (t_k, t_cur]."""
+    deg_cur = current.degree(v)
+    win = delta.window_mask(t_k, t_cur) & delta.valid_mask()
+    touch = win & ((delta.u == v) | (delta.v == v))
+    sign = jnp.where(delta.op == ADD_EDGE, 1,
+                     jnp.where(delta.op == REM_EDGE, -1, 0))
+    return deg_cur - jnp.sum(sign * touch.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def hybrid_point_degree_indexed(current: DenseGraph, delta: Delta,
+                                index: NodeIndex, v, t_k, t_cur, cap: int):
+    sub = gather_node_ops(delta, index, v, cap)
+    return hybrid_point_degree(current, sub, v, t_k, t_cur)
+
+
+@partial(jax.jit, static_argnames=("num_buckets", "agg"))
+def hybrid_agg_degree(current: DenseGraph, delta: Delta, v, t_k, t_l,
+                      num_buckets: int, agg: Aggregate = "mean"):
+    """Aggregate of degree(v) over [t_k, t_l]: measure once on SG_tcur,
+    reverse-cumulative correction per time unit (one delta pass)."""
+    series = node_degree_series(current.degree(v), delta, v, t_k,
+                                num_buckets)
+    width = t_l - t_k + 1
+    keep = jnp.arange(num_buckets) < width
+    if agg == "mean":
+        return jnp.sum(jnp.where(keep, series, 0).astype(jnp.float32)) / width
+    big = jnp.int32(1 << 30)
+    if agg == "min":
+        return jnp.min(jnp.where(keep, series, big))
+    return jnp.max(jnp.where(keep, series, -big))
+
+
+def hybrid_agg_degree_windowed(current: DenseGraph, delta: Delta, v, t_k,
+                               t_l, t_cur, num_buckets: int,
+                               window_cap: int, agg: Aggregate = "mean"):
+    """Temporal-index variant: slice (t_k, t_cur] once, then correct.
+
+    Note the correction window must extend to t_cur (the anchor measure
+    is on the *current* snapshot), so the slice is (t_k, t_cur].
+    """
+    sub = gather_window(delta, t_k, t_cur, window_cap)
+    return hybrid_agg_degree(current, sub, v, t_k, t_l, num_buckets, agg)
+
+
+# ---------------------------------------------------------------------------
+# Plan selection (paper Table 2)
+# ---------------------------------------------------------------------------
+
+APPLICABLE = {
+    ("point", "node"): ("two_phase", "hybrid"),
+    ("point", "global"): ("two_phase",),
+    ("diff", "node"): ("two_phase", "delta_only", "hybrid"),
+    ("diff", "global"): ("two_phase",),
+    ("agg", "node"): ("two_phase", "hybrid"),
+    ("agg", "global"): ("two_phase",),
+}
+
+
+def applicable_plans(q: Query) -> tuple[str, ...]:
+    return APPLICABLE[(q.kind, q.scope)]
+
+
+def evaluate(current: DenseGraph, delta: Delta, t_cur, q: Query,
+             index: NodeIndex | None = None, plan: str = "auto",
+             node_cap: int = 1024, **kw):
+    """Evaluate a query with the cheapest applicable plan (or a forced
+    one).  Degree queries get the specialised delta-only/hybrid paths;
+    everything else falls back to two-phase, as in Table 2."""
+    plans = applicable_plans(q)
+    if plan == "auto":
+        plan = plans[-1] if q.measure == "degree" else "two_phase"
+    if plan not in plans:
+        raise ValueError(f"plan {plan} not applicable to {q}")
+
+    if plan == "two_phase" or q.measure != "degree":
+        return two_phase(current, delta, t_cur, q, **kw)
+    if plan == "delta_only":
+        if index is not None:
+            return delta_only_degree_diff_indexed(delta, index, q.v, q.t_k,
+                                                  q.t_l, node_cap)
+        return delta_only_degree_diff(delta, q.v, q.t_k, q.t_l)
+    # hybrid
+    if q.kind == "point":
+        if index is not None:
+            return hybrid_point_degree_indexed(current, delta, index, q.v,
+                                               q.t_k, t_cur, node_cap)
+        return hybrid_point_degree(current, delta, q.v, q.t_k, t_cur)
+    if q.kind == "diff":
+        d_l = hybrid_point_degree(current, delta, q.v, q.t_l, t_cur)
+        d_k = hybrid_point_degree(current, delta, q.v, q.t_k, t_cur)
+        return jnp.abs(d_l - d_k)
+    num_buckets = int(q.t_l - q.t_k + 1)
+    return hybrid_agg_degree(current, delta, q.v, q.t_k, q.t_l,
+                             num_buckets, q.agg)

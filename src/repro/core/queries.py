@@ -1,0 +1,204 @@
+"""Graph measures used by historical queries (paper Table 1).
+
+Node-centric measures: degree, neighborhood, induced-subgraph stats,
+k-core membership.  Global measures: diameter, connected components,
+degree distribution, PageRank, triangle count, density.
+
+On the dense layout, global measures are deliberately formulated as
+(boolean) matrix products so that on TPU they run on the MXU
+(DESIGN.md §2.2): BFS by frontier expansion, components by label
+propagation, triangles by trace(A³).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import DenseGraph
+
+INF = jnp.int32(0x3FFFFFFF)
+
+# ---------------------------------------------------------------------------
+# Node-centric measures
+# ---------------------------------------------------------------------------
+
+
+def degree(g: DenseGraph, v) -> jax.Array:
+    return g.degree(v)
+
+
+def neighborhood_size(g: DenseGraph, v, hops: int = 2) -> jax.Array:
+    """|{u : dist(v, u) ≤ hops}| − 1, via frontier matmuls."""
+    reached = jnp.zeros((g.n_cap,), bool).at[v].set(True)
+    frontier = reached
+    for _ in range(hops):
+        nxt = (frontier.astype(jnp.float32) @ g.adj.astype(jnp.float32)) > 0
+        frontier = nxt & ~reached
+        reached = reached | nxt
+    return jnp.sum(reached.astype(jnp.int32)) - 1
+
+
+def induced_subgraph_mask(g: DenseGraph, v) -> jax.Array:
+    """v plus its neighbors (the paper's induced-subgraph example)."""
+    return g.adj[v] | jnp.zeros((g.n_cap,), bool).at[v].set(g.nodes[v])
+
+
+def induced_avg_degree(g: DenseGraph, v) -> jax.Array:
+    """Average degree of the subgraph induced by v and its neighbors —
+    the paper's §3.2.3 multi-pass hybrid example."""
+    m = induced_subgraph_mask(g, v)
+    sub = g.induced(m)
+    nn = jnp.maximum(sub.num_nodes(), 1)
+    return (2.0 * sub.num_edges()) / nn
+
+
+def in_k_core(g: DenseGraph, v, k: int) -> jax.Array:
+    """Whether v survives k-core peeling."""
+    def cond(state):
+        keep, changed = state
+        return changed
+
+    def body(state):
+        keep, _ = state
+        deg = jnp.sum(g.adj & keep[None, :], axis=1)
+        new = keep & (deg >= k) & g.nodes
+        return new, jnp.any(new != keep)
+
+    keep0 = g.nodes
+    keep, _ = jax.lax.while_loop(cond, body, (keep0, jnp.bool_(True)))
+    return keep[v]
+
+
+# ---------------------------------------------------------------------------
+# Global measures
+# ---------------------------------------------------------------------------
+
+
+def num_nodes(g: DenseGraph):
+    return g.num_nodes()
+
+
+def num_edges(g: DenseGraph):
+    return g.num_edges()
+
+
+def density(g: DenseGraph) -> jax.Array:
+    n = g.num_nodes().astype(jnp.float32)
+    e = g.num_edges().astype(jnp.float32)
+    return jnp.where(n > 1, 2.0 * e / (n * (n - 1.0)), 0.0)
+
+
+def avg_degree(g: DenseGraph) -> jax.Array:
+    n = jnp.maximum(g.num_nodes(), 1).astype(jnp.float32)
+    return 2.0 * g.num_edges().astype(jnp.float32) / n
+
+
+def degree_distribution(g: DenseGraph, max_deg: int) -> jax.Array:
+    """Histogram of degrees over valid nodes, bins [0, max_deg]."""
+    deg = jnp.clip(g.degrees(), 0, max_deg)
+    w = g.nodes.astype(jnp.int32)
+    return jnp.zeros((max_deg + 1,), jnp.int32).at[deg].add(w)
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def connected_components(g: DenseGraph, max_iters: int = 64) -> jax.Array:
+    """Component labels via min-label propagation (MXU-friendly)."""
+    n = g.n_cap
+    labels0 = jnp.where(g.nodes, jnp.arange(n, dtype=jnp.int32), INF)
+
+    def body(state):
+        labels, _, it = state
+        neigh = jnp.where(g.adj, labels[None, :], INF)
+        new = jnp.minimum(labels, jnp.min(neigh, axis=1))
+        new = jnp.where(g.nodes, new, INF)
+        return new, jnp.any(new != labels), it + 1
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    labels, _, _ = jax.lax.while_loop(
+        cond, body, (labels0, jnp.bool_(True), jnp.int32(0)))
+    return labels
+
+
+def num_components(g: DenseGraph) -> jax.Array:
+    labels = connected_components(g)
+    own = labels == jnp.arange(g.n_cap, dtype=jnp.int32)
+    return jnp.sum((own & g.nodes).astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("num_sources", "max_iters"))
+def diameter(g: DenseGraph, num_sources: int = 0, max_iters: int = 64):
+    """(Estimated) diameter via multi-source BFS frontier matmuls.
+
+    ``num_sources == 0`` → exact: BFS from every node.  Unreachable pairs
+    are ignored (per-component eccentricity).
+    """
+    n = g.n_cap
+    if num_sources and num_sources < n:
+        src = jnp.linspace(0, n - 1, num_sources).astype(jnp.int32)
+    else:
+        src = jnp.arange(n, dtype=jnp.int32)
+    s = src.shape[0]
+    reached = jnp.zeros((s, n), bool).at[jnp.arange(s), src].set(
+        g.nodes[src])
+    dist = jnp.where(reached, 0, INF)
+    adj_f = g.adj.astype(jnp.float32)
+
+    def body(state):
+        reached, dist, d, _ = state
+        nxt = (reached.astype(jnp.float32) @ adj_f) > 0
+        new = nxt & ~reached
+        dist = jnp.where(new, d + 1, dist)
+        return reached | new, dist, d + 1, jnp.any(new)
+
+    def cond(state):
+        _, _, d, changed = state
+        return changed & (d < max_iters)
+
+    _, dist, _, _ = jax.lax.while_loop(
+        cond, body, (reached, dist, jnp.int32(0), jnp.bool_(True)))
+    dist = jnp.where(dist >= INF, -1, dist)  # unreachable
+    ecc = jnp.max(dist, axis=1)
+    ecc = jnp.where(g.nodes[src], ecc, -1)
+    return jnp.max(ecc)
+
+
+def triangle_count(g: DenseGraph) -> jax.Array:
+    a = g.adj.astype(jnp.float32)
+    return (jnp.trace(a @ a @ a) / 6.0).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def pagerank(g: DenseGraph, iters: int = 20, damp: float = 0.85):
+    """Power iteration on the degree-normalized adjacency."""
+    n_valid = jnp.maximum(g.num_nodes(), 1).astype(jnp.float32)
+    deg = jnp.maximum(g.degrees().astype(jnp.float32), 1.0)
+    a = g.adj.astype(jnp.float32) / deg[:, None]
+    r = jnp.where(g.nodes, 1.0 / n_valid, 0.0)
+
+    def body(_, r):
+        r2 = damp * (r @ a) + (1.0 - damp) / n_valid
+        return jnp.where(g.nodes, r2, 0.0)
+
+    return jax.lax.fori_loop(0, iters, body, r)
+
+
+# Registry: name -> (fn, scope). Node-centric fns take (g, v).
+NODE_MEASURES = {
+    "degree": degree,
+    "neighborhood2": neighborhood_size,
+    "induced_avg_degree": induced_avg_degree,
+}
+GLOBAL_MEASURES = {
+    "num_nodes": num_nodes,
+    "num_edges": num_edges,
+    "density": density,
+    "avg_degree": avg_degree,
+    "num_components": num_components,
+    "diameter": diameter,
+    "triangles": triangle_count,
+}

@@ -1,0 +1,286 @@
+"""The temporal graph store: current snapshot + interval delta.
+
+Implements the paper's storage model (§2.2) and update loop
+(Algorithm 3): updates for the running time unit are accumulated in a
+temporary delta, applied to the current snapshot at the unit boundary,
+and appended to the interval delta.  The store is the host-side
+component (ingest is inherently sequential/IO); everything it hands to
+queries is device arrays.
+
+Also owns: the persistent edge registry (slot ids, DESIGN.md §2.1), the
+materialized-snapshot sequence + policy (§2.2), and the delta indexes
+(§3.3.2).  The paper's invertibility discipline is enforced on ingest:
+``remNode`` is preceded by ``remEdge`` for every live incident edge at
+the same time unit (§2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queries as Q
+from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
+                              T_PAD, Delta)
+from repro.core.graph import DenseGraph, EdgeGraph
+from repro.core.index import NodeIndex, build_node_index_host
+from repro.core.materialize import (MaterializationPolicy, MaterializedStore)
+from repro.core.plans import Query, evaluate
+from repro.core.reconstruct import reconstruct_dense
+
+
+@dataclasses.dataclass
+class Op:
+    op: int
+    u: int
+    v: int
+    t: int
+
+
+class TemporalGraphStore:
+    """Current snapshot SG_tcur + Δ[t0, tcur] (+ materialized snapshots)."""
+
+    def __init__(self, n_cap: int, e_cap: int | None = None,
+                 policy: MaterializationPolicy | None = None,
+                 enforce_invertible: bool = True):
+        self.n_cap = n_cap
+        self.e_cap = e_cap or 8 * n_cap
+        self.t0 = 0
+        self.t_cur = 0
+        # host-side delta log (python lists; O(1) append, converted lazily)
+        self._op_l: list[int] = []
+        self._u_l: list[int] = []
+        self._v_l: list[int] = []
+        self._slot_l: list[int] = []
+        self._t_l: list[int] = []
+        # host mirrors of current state (for ingest-time legality checks)
+        self._nodes = np.zeros((n_cap,), bool)
+        self._adj_host: dict[tuple[int, int], bool] = {}
+        self._edge_slots: dict[tuple[int, int], int] = {}
+        self._next_edge_slot = 0
+        self.enforce_invertible = enforce_invertible
+        # device-side current snapshot
+        self.current = DenseGraph(nodes=jnp.zeros((n_cap,), bool),
+                                  adj=jnp.zeros((n_cap, n_cap), bool))
+        self.materialized = MaterializedStore()
+        self.policy = policy
+        self._ops_since_mat = 0
+        self._t_last_mat = 0
+        self._delta_cache: Delta | None = None
+        self._index_cache: NodeIndex | None = None
+
+    # ---------------------------------------------------------------- ingest
+
+    def _canon(self, u: int, v: int) -> tuple[int, int]:
+        return (u, v) if u <= v else (v, u)
+
+    def _edge_slot(self, u: int, v: int) -> int:
+        key = self._canon(u, v)
+        if key not in self._edge_slots:
+            self._edge_slots[key] = self._next_edge_slot
+            self._next_edge_slot += 1
+        return self._edge_slots[key]
+
+    def _append(self, op: int, u: int, v: int, t: int) -> None:
+        slot = u if op in (ADD_NODE, REM_NODE) else self._edge_slot(u, v)
+        self._op_l.append(op)
+        self._u_l.append(u)
+        self._v_l.append(v)
+        self._slot_l.append(slot)
+        self._t_l.append(t)
+
+    @property
+    def _op(self) -> np.ndarray:
+        return np.asarray(self._op_l, np.int32)
+
+    @property
+    def _u(self) -> np.ndarray:
+        return np.asarray(self._u_l, np.int32)
+
+    @property
+    def _v(self) -> np.ndarray:
+        return np.asarray(self._v_l, np.int32)
+
+    @property
+    def _slot(self) -> np.ndarray:
+        return np.asarray(self._slot_l, np.int32)
+
+    @property
+    def _t(self) -> np.ndarray:
+        return np.asarray(self._t_l, np.int32)
+
+    def _apply_host(self, op: int, u: int, v: int) -> bool:
+        """Apply to host mirror; returns False if op is an illegal
+        transition (already valid / already absent) — such ops are
+        rejected so the log stays a genuine transition log (the paper's
+        deltas record real transitions only)."""
+        if op == ADD_NODE:
+            if self._nodes[u]:
+                return False
+            self._nodes[u] = True
+        elif op == REM_NODE:
+            if not self._nodes[u]:
+                return False
+            self._nodes[u] = False
+        elif op == ADD_EDGE:
+            key = self._canon(u, v)
+            if u == v or self._adj_host.get(key) or not (
+                    self._nodes[u] and self._nodes[v]):
+                return False
+            self._adj_host[key] = True
+        elif op == REM_EDGE:
+            key = self._canon(u, v)
+            if not self._adj_host.get(key):
+                return False
+            self._adj_host[key] = False
+        return True
+
+    def ingest(self, ops: Iterable[Op | tuple]) -> int:
+        """Record a batch of update operations (paper Algorithm 3 lines
+        1–6).  Ops must be time-ordered and ≥ t_cur.  Returns #accepted.
+        """
+        n_acc = 0
+        for o in ops:
+            if not isinstance(o, Op):
+                o = Op(*o)
+            if o.t < self.t_cur:
+                raise ValueError("ops must be time-ordered (append-only)")
+            if o.op == REM_NODE and self.enforce_invertible:
+                # Paper §2.1: record remEdge for every live incident edge
+                # first, same time point, so the delta stays invertible.
+                for (a, b), live in list(self._adj_host.items()):
+                    if live and (a == o.u or b == o.u):
+                        if self._apply_host(REM_EDGE, a, b):
+                            self._append(REM_EDGE, a, b, o.t)
+                            n_acc += 1
+            if self._apply_host(o.op, o.u, o.v):
+                self._append(o.op, o.u, o.v, o.t)
+                n_acc += 1
+        self._delta_cache = None
+        self._index_cache = None
+        return n_acc
+
+    def advance_to(self, t_next: int) -> None:
+        """Close the current time unit (Algorithm 3 lines 7–9): apply the
+        temporary delta to SG_tcur, append it to the interval delta (the
+        host log already holds it), and maybe materialize."""
+        assert t_next >= self.t_cur
+        new_ops = int(np.sum(self._t > self.t_cur)) if len(self._t) else 0
+        delta = self.delta()
+        self.current = reconstruct_dense(self.current, delta,
+                                         self.t_cur, t_next)
+        self.t_cur = t_next
+        self._ops_since_mat += new_ops
+        if self.policy is not None:
+            last = (self.materialized.snapshots[-1]
+                    if self.materialized.snapshots else None)
+            if self.policy.should_materialize(
+                    t_now=t_next, t_last=self._t_last_mat,
+                    ops_since=self._ops_since_mat, current=self.current,
+                    last=last):
+                self.materialized.add(t_next, self.current)
+                self._ops_since_mat = 0
+                self._t_last_mat = t_next
+
+    # ---------------------------------------------------------------- views
+
+    def delta(self, capacity: int | None = None) -> Delta:
+        """The interval delta Δ[t0, tcur] as device arrays (cached)."""
+        if self._delta_cache is not None and capacity is None:
+            return self._delta_cache
+        n = len(self._op)
+        cap = capacity or max(1, 1 << int(np.ceil(np.log2(max(n, 1)))))
+        pad = cap - n
+        d = Delta(
+            op=jnp.asarray(np.concatenate([self._op,
+                                           np.full(pad, NOP, np.int32)])),
+            u=jnp.asarray(np.concatenate([self._u, np.zeros(pad, np.int32)])),
+            v=jnp.asarray(np.concatenate([self._v, np.zeros(pad, np.int32)])),
+            slot=jnp.asarray(np.concatenate([self._slot,
+                                             np.zeros(pad, np.int32)])),
+            t=jnp.asarray(np.concatenate([self._t,
+                                          np.full(pad, T_PAD, np.int32)])),
+            n_ops=jnp.int32(n))
+        if capacity is None:
+            self._delta_cache = d
+        return d
+
+    def node_index(self) -> NodeIndex:
+        if self._index_cache is None:
+            self._index_cache = build_node_index_host(self.delta(),
+                                                      self.n_cap)
+        return self._index_cache
+
+    def edge_graph(self) -> EdgeGraph:
+        """Current snapshot in edge-slot layout (for the distributed
+        engine)."""
+        e_cap = max(1, 1 << int(np.ceil(np.log2(max(self._next_edge_slot,
+                                                    1)))))
+        eu = np.zeros((e_cap,), np.int32)
+        ev = np.zeros((e_cap,), np.int32)
+        emask = np.zeros((e_cap,), bool)
+        for (a, b), s in self._edge_slots.items():
+            eu[s], ev[s] = a, b
+            emask[s] = bool(self._adj_host.get((a, b), False))
+        return EdgeGraph(nodes=jnp.asarray(self._nodes.copy()),
+                         eu=jnp.asarray(eu), ev=jnp.asarray(ev),
+                         emask=jnp.asarray(emask),
+                         n_edges_reg=jnp.int32(self._next_edge_slot))
+
+    # ---------------------------------------------------------------- query
+
+    def snapshot_at(self, t: int, *, use_materialized: bool = True,
+                    selection: str = "ops",
+                    windowed: bool = False) -> DenseGraph:
+        """Reconstruct SG_t (anchored at the best materialized snapshot
+        if available, else at SG_tcur — Theorem 1).
+
+        ``windowed=True`` slices the delta to the anchor→t window
+        through the temporal index first (capacity rounded to a power
+        of two to bound recompiles).  This is what makes
+        operation-based anchor selection pay off in the *vectorized*
+        engine: the LWW scatter then does O(window) work instead of
+        O(M) masked work (see EXPERIMENTS §Perf — for the sequential
+        engine the paper's selection already pays off unmodified)."""
+        delta = self.delta()
+        if use_materialized and self.materialized.times:
+            t_a, g_a = self.materialized.select(t, delta, method=selection)
+            # current snapshot competes with the materialized ones
+            from repro.core.index import count_window_ops
+            cost_cur = int(count_window_ops(delta, min(t, self.t_cur),
+                                            max(t, self.t_cur)))
+            cost_mat = int(count_window_ops(delta, min(t, t_a),
+                                            max(t, t_a)))
+            if cost_cur < cost_mat:
+                t_a, g_a = self.t_cur, self.current
+        else:
+            t_a, g_a = self.t_cur, self.current
+        if windowed:
+            from repro.core.index import count_window_ops, gather_window
+            n_win = int(count_window_ops(delta, min(t, t_a), max(t, t_a)))
+            cap = max(64, 1 << int(np.ceil(np.log2(max(n_win, 1)))))
+            if cap < delta.capacity:
+                delta = gather_window(delta, min(t, t_a), max(t, t_a),
+                                      cap)
+        return reconstruct_dense(g_a, delta, t_a, t)
+
+    def query(self, q: Query, plan: str = "auto", indexed: bool = False,
+              **kw):
+        index = self.node_index() if indexed else None
+        return evaluate(self.current, self.delta(), self.t_cur, q,
+                        index=index, plan=plan, **kw)
+
+    # stats used by benchmarks (paper Table 3)
+    def stats(self) -> dict:
+        return {
+            "inserted_nodes": int(np.sum(self._op == ADD_NODE)),
+            "removed_nodes": int(np.sum(self._op == REM_NODE)),
+            "inserted_edges": int(np.sum(self._op == ADD_EDGE)),
+            "removed_edges": int(np.sum(self._op == REM_EDGE)),
+            "total_ops": int(len(self._op)),
+            "t_cur": self.t_cur,
+            "live_nodes": int(np.sum(self._nodes)),
+            "live_edges": int(sum(self._adj_host.values())),
+        }

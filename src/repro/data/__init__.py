@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, batch_specs
+
+__all__ = ["SyntheticLM", "batch_specs"]

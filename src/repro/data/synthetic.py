@@ -1,0 +1,72 @@
+"""Deterministic, stateless synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — the pipeline has no
+cursor state, which makes resume-after-failure trivial (restore the
+step counter and the stream continues exactly), sharding-friendly
+(each data shard draws its slice of the batch from a per-shard fold-in)
+and reproducible across mesh shapes (elastic restarts see the same
+token stream).
+
+The token stream is a mixture of Zipf-distributed unigrams and short
+copy patterns, so small models have learnable structure (loss visibly
+drops within a few hundred steps in examples/train_lm_delta_ckpt.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+class SyntheticLM:
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+
+    def batch_at(self, step: int | jax.Array) -> dict:
+        """Batch for a given step (host or traced)."""
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 jnp.asarray(step, jnp.uint32))
+        k1, k2, k3 = jax.random.split(key, 3)
+        # Zipf-ish unigrams via exponential transform of uniforms
+        u = jax.random.uniform(k1, (self.batch, self.seq),
+                               minval=1e-6, maxval=1.0)
+        zipf = jnp.floor(jnp.exp(jnp.log(float(cfg.vocab)) * u)) - 1.0
+        toks = jnp.clip(zipf.astype(jnp.int32), 0, cfg.vocab - 1)
+        # splice in copy patterns: second half repeats the first quarter
+        quarter = self.seq // 4
+        if quarter > 0:
+            src = jax.lax.dynamic_slice_in_dim(toks, 0, quarter, axis=1)
+            insert_at = self.seq - quarter
+            do_copy = jax.random.bernoulli(k2, 0.5,
+                                           (self.batch, 1))
+            tail = jax.lax.dynamic_slice_in_dim(toks, insert_at, quarter,
+                                                axis=1)
+            spliced = jnp.where(do_copy, src, tail)
+            toks = jax.lax.dynamic_update_slice_in_dim(
+                toks, spliced, insert_at, axis=1)
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.family == "encdec":
+            batch["frames"] = 0.02 * jax.random.normal(
+                k3, (self.batch, cfg.enc_seq, cfg.d_model))
+        if cfg.family == "vlm":
+            batch["patches"] = 0.02 * jax.random.normal(
+                k3, (self.batch, cfg.n_patches, cfg.d_model))
+        return batch
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    s = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        s["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq,
+                                            cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        s["patches"] = jax.ShapeDtypeStruct((batch, cfg.n_patches,
+                                             cfg.d_model), jnp.float32)
+    return s

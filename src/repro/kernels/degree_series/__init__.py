@@ -1,0 +1,7 @@
+from repro.kernels.degree_series.degree_series import degree_series_tiles
+from repro.kernels.degree_series.ops import (bucket_node_events,
+                                             degree_series_kernel)
+from repro.kernels.degree_series.ref import degree_series_ref
+
+__all__ = ["degree_series_kernel", "degree_series_ref",
+           "degree_series_tiles", "bucket_node_events"]

@@ -1,0 +1,62 @@
+"""jit'd wrapper: bucket edge-op endpoint events by node tile, run the
+degree_series kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import ADD_EDGE, Delta
+from repro.core.graph import DenseGraph
+from repro.kernels.degree_series.degree_series import degree_series_tiles
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "tile", "cap", "num_buckets"))
+def bucket_node_events(delta: Delta, n: int, t_k, num_buckets: int,
+                       tile: int, cap: int):
+    """Dense per-node-tile event blocks i32[T, cap, 4]:
+    [local_node, bucket, sign, valid].  Each in-suffix edge op (t > t_k)
+    yields one event per endpoint; bucket = clip(t - t_k, 0, B)."""
+    m = delta.capacity
+    tcount = n // tile
+    e = delta.valid_mask() & delta.is_edge_op() & (delta.t > t_k)
+    sign = jnp.where(delta.op == ADD_EDGE, 1, -1)
+    b = jnp.clip(delta.t - t_k, 0, num_buckets)
+
+    nodes = jnp.concatenate([delta.u, delta.v])
+    ee = jnp.concatenate([e, e])
+    signs = jnp.concatenate([sign, sign])
+    bs = jnp.concatenate([b, b])
+
+    tile_id = jnp.where(ee, nodes // tile, tcount)
+    order = jnp.argsort(tile_id, stable=True)
+    tid_s = tile_id[order]
+    seg_start = jnp.searchsorted(tid_s, jnp.arange(tcount + 1))
+    pos = jnp.arange(2 * m) - seg_start[tid_s]
+    overflow = jnp.any((pos >= cap) & (tid_s < tcount))
+    keep = (tid_s < tcount) & (pos < cap)
+    entries = jnp.stack([nodes[order] % tile, bs[order], signs[order],
+                         jnp.ones_like(pos)], axis=1)
+    blocks = jnp.zeros((tcount + 1, cap, 4), jnp.int32)
+    blocks = blocks.at[jnp.where(keep, tid_s, tcount),
+                       jnp.clip(pos, 0, cap - 1)].set(
+        jnp.where(keep[:, None], entries, 0))
+    return blocks[:tcount], overflow
+
+
+def degree_series_kernel(current: DenseGraph, delta: Delta, t_k: int,
+                         num_buckets: int, tile: int = 256,
+                         cap: int = 1024, interpret: bool = True):
+    """i32[num_buckets, N]: degrees of every node at t_k + b."""
+    n = current.n_cap
+    pad = (-n) % tile
+    deg = current.degrees()
+    if pad:
+        deg = jnp.pad(deg, (0, pad))
+    blocks, overflow = bucket_node_events(delta, n + pad, t_k, num_buckets,
+                                          tile, cap)
+    out = degree_series_tiles(deg, blocks, tile=tile, cap=cap,
+                              num_buckets=num_buckets, interpret=interpret)
+    return out[:, :n], overflow

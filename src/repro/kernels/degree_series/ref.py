@@ -1,0 +1,24 @@
+"""Independent oracle for degree_series: reconstruct a full snapshot at
+every bucket time (vmap of the LWW oracle) and take degrees."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import Delta
+from repro.core.graph import DenseGraph
+from repro.kernels.delta_apply.ref import delta_apply_ref
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets",))
+def degree_series_ref(current: DenseGraph, delta: Delta, t_k, t_cur,
+                      num_buckets: int) -> jax.Array:
+    ts = t_k + jnp.arange(num_buckets, dtype=jnp.int32)
+
+    def one(t):
+        g = delta_apply_ref(current, delta, t_cur, t)
+        return g.degrees()
+
+    return jax.lax.map(one, ts)

@@ -1,0 +1,6 @@
+from repro.kernels.delta_apply.delta_apply import delta_apply_tiles
+from repro.kernels.delta_apply.ops import bucket_ops, delta_apply
+from repro.kernels.delta_apply.ref import delta_apply_ref
+
+__all__ = ["delta_apply", "delta_apply_ref", "delta_apply_tiles",
+           "bucket_ops"]

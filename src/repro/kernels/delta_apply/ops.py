@@ -1,0 +1,98 @@
+"""jit'd wrapper for the delta_apply kernel: window filtering, tile
+bucketing, ordering, and the node-mask update (nodes are N-sized and
+cheap — they stay on the XLA path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import ADD_EDGE, ADD_NODE, REM_EDGE, Delta
+from repro.core.graph import DenseGraph
+from repro.kernels.delta_apply.delta_apply import delta_apply_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile", "cap", "forward"))
+def bucket_ops(delta: Delta, n: int, t_lo, t_hi, tile: int, cap: int,
+               forward: bool):
+    """Build the dense per-tile op blocks i32[Tr, Tc, cap, 4].
+
+    Every in-window edge op contributes two entries ((u,v) and (v,u)).
+    Entries are ordered so sequential overwrite == last-writer-wins:
+    ascending time for forward, descending for backward.  Per-tile
+    overflow beyond ``cap`` is detected and returned as a flag.
+    """
+    m = delta.capacity
+    tr = n // tile
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    e = in_win & delta.is_edge_op()
+    val = (delta.op == (ADD_EDGE if forward else REM_EDGE)).astype(jnp.int32)
+
+    us = jnp.concatenate([delta.u, delta.v])
+    vs = jnp.concatenate([delta.v, delta.u])
+    ee = jnp.concatenate([e, e])
+    vals = jnp.concatenate([val, val])
+    order_rank = jnp.concatenate([jnp.arange(m), jnp.arange(m)])
+    if not forward:
+        order_rank = (m - 1) - order_rank  # descending time
+
+    tile_id = jnp.where(ee, (us // tile) * tr + (vs // tile), tr * tr)
+    # sort by (tile, rank): stable two-pass — first by rank, then by tile
+    o1 = jnp.argsort(order_rank, stable=True)
+    t1 = tile_id[o1]
+    o2 = jnp.argsort(t1, stable=True)
+    perm = o1[o2]
+    tid_s = tile_id[perm]
+    # position of each entry within its tile bucket
+    seg_start = jnp.searchsorted(tid_s, jnp.arange(tr * tr + 1))
+    pos = jnp.arange(2 * m) - seg_start[tid_s]
+    overflow = jnp.any((pos >= cap) & (tid_s < tr * tr))
+
+    dst_t = jnp.where(tid_s < tr * tr, tid_s, tr * tr)
+    dst_p = jnp.clip(pos, 0, cap - 1)
+    entries = jnp.stack([us[perm] % tile, vs[perm] % tile, vals[perm],
+                         jnp.ones_like(dst_p)], axis=1)
+    blocks = jnp.zeros((tr * tr + 1, cap, 4), jnp.int32)
+    keep = (tid_s < tr * tr) & (pos < cap)
+    blocks = blocks.at[jnp.where(keep, dst_t, tr * tr),
+                       dst_p].set(jnp.where(keep[:, None], entries, 0))
+    return blocks[:tr * tr].reshape(tr, tr, cap, 4), overflow
+
+
+def delta_apply(anchor: DenseGraph, delta: Delta, t_anchor: int,
+                t_query: int, tile: int = 256, cap: int = 1024,
+                interpret: bool = True) -> DenseGraph:
+    """Kernel-backed reconstruct_at for DenseGraph (edge part on the
+    Pallas kernel, node mask via XLA scatter)."""
+    n = anchor.n_cap
+    pad = (-n) % tile
+    forward = bool(t_query >= t_anchor)
+    t_lo, t_hi = min(t_anchor, t_query), max(t_anchor, t_query)
+
+    adj = anchor.adj.astype(jnp.int32)
+    if pad:
+        adj = jnp.pad(adj, ((0, pad), (0, pad)))
+    blocks, overflow = bucket_ops(delta, n + pad, t_lo, t_hi, tile, cap,
+                                  forward)
+    out = delta_apply_tiles(adj, blocks, tile=tile, cap=cap,
+                            interpret=interpret)
+    adj_new = out[:n, :n].astype(bool)
+
+    # node mask: same LWW on the XLA path (N-sized, negligible)
+    m = delta.capacity
+    idx = jnp.arange(m, dtype=jnp.int32)
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    nwin = in_win & delta.is_node_op()
+    first = jnp.full((n,), m, jnp.int32).at[delta.u].min(
+        jnp.where(nwin, idx, m))
+    last = jnp.full((n,), -1, jnp.int32).at[delta.u].max(
+        jnp.where(nwin, idx, -1))
+    if forward:
+        dec = last >= 0
+        val = delta.op[jnp.clip(last, 0)] == ADD_NODE
+    else:
+        dec = first < m
+        val = delta.op[jnp.clip(first, None, m - 1)] != ADD_NODE
+    nodes = jnp.where(dec, val, anchor.nodes)
+    return DenseGraph(nodes=nodes, adj=adj_new), overflow

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for delta_apply: scatter-argmin/argmax LWW."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import ADD_EDGE, ADD_NODE, Delta
+from repro.core.graph import DenseGraph
+
+
+@jax.jit
+def delta_apply_ref(anchor: DenseGraph, delta: Delta, t_anchor,
+                    t_query) -> DenseGraph:
+    n = anchor.n_cap
+    m = delta.capacity
+    forward = t_query >= t_anchor
+    t_lo = jnp.minimum(t_anchor, t_query)
+    t_hi = jnp.maximum(t_anchor, t_query)
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    idx = jnp.arange(m, dtype=jnp.int32)
+
+    e = in_win & delta.is_edge_op()
+    first = jnp.full((n, n), m, jnp.int32)
+    last = jnp.full((n, n), -1, jnp.int32)
+    for (r, c) in ((delta.u, delta.v), (delta.v, delta.u)):
+        first = first.at[r, c].min(jnp.where(e, idx, m))
+        last = last.at[r, c].max(jnp.where(e, idx, -1))
+    dec_f = last >= 0
+    val_f = delta.op[jnp.clip(last, 0)] == ADD_EDGE
+    dec_b = first < m
+    val_b = delta.op[jnp.clip(first, None, m - 1)] != ADD_EDGE
+    dec = jnp.where(forward, dec_f, dec_b)
+    val = jnp.where(forward, val_f, val_b)
+    adj = jnp.where(dec, val, anchor.adj)
+
+    nw = in_win & delta.is_node_op()
+    firstn = jnp.full((n,), m, jnp.int32).at[delta.u].min(
+        jnp.where(nw, idx, m))
+    lastn = jnp.full((n,), -1, jnp.int32).at[delta.u].max(
+        jnp.where(nw, idx, -1))
+    dec_n = jnp.where(forward, lastn >= 0, firstn < m)
+    val_n = jnp.where(forward,
+                      delta.op[jnp.clip(lastn, 0)] == ADD_NODE,
+                      delta.op[jnp.clip(firstn, None, m - 1)] != ADD_NODE)
+    nodes = jnp.where(dec_n, val_n, anchor.nodes)
+    return DenseGraph(nodes=nodes, adj=adj)

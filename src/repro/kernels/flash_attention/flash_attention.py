@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash attention forward (causal / sliding-window,
+GQA via index-map head folding).
+
+Online-softmax tiling: grid (batch·q_heads, Sq/BQ, Skv/BK) with the KV
+dimension innermost; per-instance VMEM scratch carries the running max,
+normalizer and accumulator across KV blocks.  Out-of-range blocks
+(future blocks under causal masking, expired blocks under a sliding
+window) are skipped entirely with ``pl.when`` — the compute volume is
+the masked volume, not Sq·Skv.
+
+Block sizes default to (BQ, BK) = (128, 128): MXU-aligned and a VMEM
+footprint of ~(2·BQ·D + BK·D + BQ·BK)·4 bytes ≈ 260 KiB at D = 128.
+
+GQA: K/V stay (B·Hkv, Skv, D); the BlockSpec index map folds the query
+head onto its KV group (``h // group``), so nothing is materialized at
+Hq width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, nk: int, causal: bool, window: int | None,
+            scale: float, kv_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+    # Block-level skip: causal ⇒ KV block must start at/before the last
+    # query row; window ⇒ KV block must end after the first in-window key.
+    needed = jnp.bool_(True)
+    if causal:
+        needed = needed & (k_lo <= q_lo + bq - 1)
+    if window is not None:
+        needed = needed & (k_lo + bk - 1 >= q_lo - window + 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BK)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len  # padding
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))
+        # rows with no unmasked key yet have m == -inf; keep them inert
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(jnp.isneginf(m_prev[:, 0]), 0.0,
+                          jnp.exp(m_prev[:, 0] - m_safe))
+        l_new = alpha * l_prev[:, 0] + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "group",
+                     "kv_len", "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        scale: float = 1.0, bq: int = 128, bk: int = 128,
+                        group: int = 1, kv_len: int | None = None,
+                        interpret: bool = True) -> jax.Array:
+    """q: [BHq, Sq, D]; k/v: [BHkv, Skv, D]; BHq = BHkv · group.
+
+    Sq/Skv must be multiples of bq/bk (ops.py pads); ``kv_len`` is the
+    unpadded key length for padding masks.
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    nk = skv // bk
+    kv_len = kv_len if kv_len is not None else skv
+    grid = (bh, sq // bq, nk)
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                               window=window, scale=scale, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""jit'd wrapper around the flash-attention kernel.
+
+Handles padding to block multiples, GQA head folding, and provides a
+``custom_vjp`` whose backward pass is the jnp reference (the kernel is a
+forward/inference kernel; training uses either this custom_vjp or the
+pure-XLA attention in ``repro/models/attention.py``)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, bq: int = 128, bk: int = 128,
+                    interpret: bool = True):
+    """q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D] → [B, Hq, Sq, D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qq = _pad_to(q.reshape(b * hq, sq, d), 1, bq)
+    kk = _pad_to(k.reshape(b * hkv, skv, d), 1, bk)
+    vv = _pad_to(v.reshape(b * hkv, skv, d), 1, bk)
+    out = flash_attention_fwd(qq, kk, vv, causal=causal, window=window,
+                              scale=scale, bq=bq, bk=bk, group=group,
+                              kv_len=skv, interpret=interpret)
+    return out[:, :sq].reshape(b, hq, sq, d)
+
+
+def _fwd(q, k, v, causal, window, scale, bq, bk, interpret):
+    out = flash_attention(q, k, v, causal, window, scale, bq, bk, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, scale, bq, bk, interpret, res, g):
+    q, k, v = res
+    d = q.shape[-1]
+    s = scale if scale is not None else d ** -0.5
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, scale=s), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

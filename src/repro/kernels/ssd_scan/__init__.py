@@ -1,0 +1,5 @@
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+
+__all__ = ["ssd_scan", "ssd_ref", "ssd_scan_fwd"]

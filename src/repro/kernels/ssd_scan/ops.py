@@ -1,0 +1,39 @@
+"""jit'd wrapper: model-layout SSD → kernel layout (fused dt·x and
+a·dt, per-head broadcast of B/C, chunk padding with inert steps)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, chunk: int = 128, interpret: bool = True):
+    """Same signature as models.ssm.ssd_chunked (single B/C group):
+    x: [B,S,H,P], dt: [B,S,H], a: [H], b/c: [B,S,N] → y [B,S,H,P]."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    dtx = (dt[..., None] * x.astype(jnp.float32))
+    da = dt * a[None, None, :]
+    if pad:
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    # [B,S,H,*] -> [B*H, S, *]
+    dtx = dtx.transpose(0, 2, 1, 3).reshape(bsz * h, sp, p)
+    da = da.transpose(0, 2, 1).reshape(bsz * h, sp, 1)
+    bb = jnp.broadcast_to(b[:, None], (bsz, h, sp, n)).reshape(
+        bsz * h, sp, n)
+    cc = jnp.broadcast_to(c[:, None], (bsz, h, sp, n)).reshape(
+        bsz * h, sp, n)
+    y = ssd_scan_fwd(dtx.astype(jnp.float32), da.astype(jnp.float32),
+                     bb.astype(jnp.float32), cc.astype(jnp.float32),
+                     chunk=chunk, interpret=interpret)
+    y = y.reshape(bsz, h, sp, p).transpose(0, 2, 1, 3)
+    return y[:, :s]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: the per-step SSD recurrence (independent of the
+chunked dual form in models.ssm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c):
+    """x: [B,S,H,P], dt: [B,S,H], a: [H], b/c: [B,S,N] → y [B,S,H,P]."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hst, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a[None, :])[..., None, None]
+        upd = (dtt[..., None, None] * xt.astype(jnp.float32)[..., None]
+               * bt.astype(jnp.float32)[:, None, None, :])
+        hst = hst * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", hst, ct.astype(jnp.float32))
+        return hst, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3)

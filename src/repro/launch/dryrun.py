@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes, with no array allocation (everything is
+ShapeDtypeStructs), and extract the roofline inputs:
+
+  compiled.cost_analysis()    → per-device FLOPs / bytes accessed
+  compiled.memory_analysis()  → per-device HBM footprint
+  compiled.as_text()          → collective operand bytes (parsed)
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+
+Results land in benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json —
+the EXPERIMENTS.md tables are generated from these.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, ShardingConfig, TrainConfig
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (collective_bytes, model_flops,
+                                   roofline_terms, scan_aware_metrics)
+from repro.models import api
+from repro.runtime.steps import (init_train_state, make_decode_step,
+                                 make_prefill_step, make_train_step)
+from repro.sharding import (logical_rules, mesh_context, param_specs,
+                            resolve, spec)
+
+RESULTS = os.path.join(os.path.dirname(__file__),
+                       "../../../benchmarks/results/dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs for the dry-run inputs
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(p, attr):
+                out.append(str(getattr(p, attr)))
+                break
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def batch_sharding(tree, mesh):
+    with mesh_context(mesh):
+        def one(leaf):
+            parts = [resolve("batch", leaf.shape[0])]
+            parts += [None] * (len(leaf.shape) - 1)
+            return NamedSharding(mesh, P(*parts))
+        return jax.tree.map(one, tree)
+
+
+def cache_sharding(tree, mesh):
+    """Stacked decode caches: [layer-groups, batch, ...].  Batch shards
+    over (pod, data) when divisible; otherwise (long_500k: batch=1) the
+    KV sequence dim shards over data (flash-decode style)."""
+    with mesh_context(mesh):
+        def one(path, leaf):
+            name = _path_str(path)
+            dims = [None] * len(leaf.shape)
+            if len(leaf.shape) < 2:
+                return NamedSharding(mesh, P(*dims))
+            b = leaf.shape[1]
+            ax = resolve("batch", b)
+            dims[1] = ax
+            if ax is None and (name.endswith("/k") or name.endswith("/v")
+                               or name.endswith("/xk")
+                               or name.endswith("/xv")):
+                dims[2] = resolve("kv_seq", leaf.shape[2])
+            # shard heads/state over model where divisible
+            if name.endswith(("/k", "/v", "/xk", "/xv")) \
+                    and len(leaf.shape) == 5:
+                dims[3] = resolve("model", leaf.shape[3])
+            if name.endswith("/state") and len(leaf.shape) == 5:
+                dims[2] = resolve("model", leaf.shape[2])
+            return NamedSharding(mesh, P(*dims))
+        return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def state_sharding(state_shapes, mesh):
+    with mesh_context(mesh):
+        specs = param_specs(state_shapes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+# Named sharding-rule experiments for §Perf hillclimbing. Values
+# override sharding.LOGICAL_RULES for the duration of one cell.
+RULESETS: dict[str, dict] = {
+    # Small models: give the model axis to the batch (pure DP-256),
+    # ZeRO-3 everything over both axes. Kills the unsharded-attention
+    # blowup when n_heads doesn't divide the model axis. Axis order
+    # (data, model, pod): batch 256 = data×model exactly on both
+    # meshes; pod (multi-pod) goes to ZeRO instead.
+    "dp_all": {"batch": ("data", "model", "pod"), "model": (),
+               "expert": (), "fsdp": ("pod", "data", "model"),
+               "moe_fsdp": ("pod", "data", "model")},
+    # Big MoE: true expert parallelism — expert weights sharded over
+    # (pod, model) and NOT gathered (no ZeRO on expert weights);
+    # dispatch buffers shard capacity over data. Dense params keep
+    # ZeRO-3 over (pod, data).
+    "ep_moe": {"expert": ("pod", "model"), "moe_fsdp": (),
+               "moe_cap": ("data",), "fsdp": ("pod", "data")},
+    # Small-expert-count MoE (mixtral: 8 experts on a 16-way axis):
+    # keep experts whole, TP the per-expert FF dim over model, shard
+    # dispatch capacity over data. No ZeRO on expert weights.
+    "moe_tp": {"moe_ff": ("model",), "moe_cap": ("data",),
+               "moe_fsdp": ()},
+    # dp_all + expert-parallel dispatch (combined experiment)
+    "dp_all_moe": {"batch": ("pod", "data", "model"), "model": (),
+                   "fsdp": ("data", "model"),
+                   "expert": ("model",), "moe_fsdp": (),
+                   "moe_cap": ("data",)},
+}
+
+
+# Per-arch production defaults (hillclimb winners — EXPERIMENTS §Perf).
+# --rules overrides; "baseline" forces the naive GSPMD configuration.
+DEFAULT_RULES: dict[str, str | None] = {
+    "smollm-360m": "dp_all",      # 15 heads don't divide model=16: TP off
+    "whisper-small": "dp_all",    # 12 heads
+    "internvl2-1b": "dp_all",     # 14 heads
+    "gemma-2b": "dp_all",         # 8 heads
+    "mixtral-8x7b": "moe_tp",     # 8 experts: TP the expert FF instead
+    "kimi-k2-1t-a32b": "ep_moe",  # 384 experts: EP, never gather weights
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             fsdp_pod: bool | None = None, rules_name: str | None = None,
+             remat: str | None = None, attn_impl: str = "xla"):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    if shape_name == "long_500k" and not cfg.is_subquadratic():
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped":
+                "full-attention arch; long_500k needs sub-quadratic "
+                "attention (DESIGN.md §5)"}
+
+    big = cfg.name in ("kimi-k2-1t-a32b", "jamba-1.5-large-398b")
+    fsdp_pod = big if fsdp_pod is None else fsdp_pod
+    tcfg = TrainConfig(global_batch=shape.global_batch,
+                       seq_len=shape.seq_len,
+                       opt_state_dtype="int8" if big else "float32")
+    scfg = ShardingConfig(fsdp=True, fsdp_pod=fsdp_pod,
+                          remat=remat or "block", attn_impl=attn_impl)
+    rules = {}
+    if fsdp_pod:
+        rules["fsdp"] = ("pod", "data")
+    if rules_name is None:
+        rules_name = DEFAULT_RULES.get(arch)
+    if rules_name and rules_name != "baseline":
+        rules.update(RULESETS[rules_name])
+    t0 = time.time()
+
+    with logical_rules(**rules):
+        if shape.kind == "train":
+            step = make_train_step(cfg, tcfg, scfg)
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+            batch_shapes = api.input_specs(cfg, shape)
+            in_sh = (state_sharding(state_shapes, mesh),
+                     batch_sharding(batch_shapes, mesh))
+            args = (state_shapes, batch_shapes)
+            fn = step
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, impl=attn_impl)
+            params_shapes = jax.eval_shape(
+                lambda: api.init_params(jax.random.PRNGKey(0), cfg,
+                                        jnp.bfloat16))
+            batch_shapes = api.input_specs(cfg, shape)
+            in_sh = (state_sharding(params_shapes, mesh),
+                     batch_sharding(batch_shapes, mesh))
+            args = (params_shapes, batch_shapes)
+            fn = step
+        else:  # decode
+            step = make_decode_step(cfg)
+            params_shapes = jax.eval_shape(
+                lambda: api.init_params(jax.random.PRNGKey(0), cfg,
+                                        jnp.bfloat16))
+            cache_shapes = jax.eval_shape(
+                lambda: api.init_decode_caches(cfg, shape.global_batch,
+                                               shape.seq_len))
+            io_shapes = api.input_specs(cfg, shape)
+            in_sh = (state_sharding(params_shapes, mesh),
+                     cache_sharding(cache_shapes, mesh),
+                     batch_sharding({"token": io_shapes["token"]},
+                                    mesh)["token"],
+                     NamedSharding(mesh, P()))
+            args = (params_shapes, cache_shapes, io_shapes["token"],
+                    io_shapes["pos"])
+            fn = step
+
+        with mesh_context(mesh):
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    from repro.models.blocks import n_groups as _ng
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    sa = scan_aware_metrics(hlo, default_trips=_ng(cfg))
+
+    flops = float(sa["flops"])
+    bytes_acc = float(sa["bytes"])
+    terms = roofline_terms(flops, bytes_acc, sa["coll_bytes"])
+    raw_terms = roofline_terms(float(cost.get("flops", 0.0)),
+                               float(cost.get("bytes accessed", 0.0)),
+                               coll["total"])
+    mf = model_flops(cfg, shape)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # scan-aware (primary; while bodies × trip count)
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": float(sa["coll_bytes"]),
+        "roofline": terms,
+        # raw cost_analysis (loop bodies counted once) for reference
+        "raw_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collective": coll,
+            "roofline": raw_terms,
+        },
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)},
+        "model_flops_global": mf,
+        "model_flops_per_device": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / flops if flops else None,
+    }
+    return result
+
+
+def save_result(res: dict, tag: str = "") -> str:
+    mesh_dir = res.get("mesh", "16x16") + (f"__{tag}" if tag else "")
+    d = os.path.abspath(os.path.join(RESULTS, mesh_dir))
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{res['arch']}__{res['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--rules", default=None,
+                    choices=list(RULESETS) + ["baseline"])
+    ap.add_argument("--remat", default=None,
+                    choices=["none", "block", "full"])
+    ap.add_argument("--attn", default="xla",
+                    choices=["xla", "xla_flash"])
+    args = ap.parse_args()
+    if not args.tag:
+        parts = [p for p in (args.rules,
+                             args.attn if args.attn != "xla" else None,
+                             args.remat) if p]
+        args.tag = "_".join(parts)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for (a, s) in cells:
+        mesh_dir = ("2x16x16" if args.multi_pod else "16x16") + \
+            (f"__{args.tag}" if args.tag else "")
+        out = os.path.abspath(os.path.join(
+            RESULTS, mesh_dir, f"{a}__{s}.json"))
+        if args.skip_done and os.path.exists(out):
+            print(f"[skip] {a} × {s}")
+            continue
+        print(f"[cell] {a} × {s} multi_pod={args.multi_pod} "
+              f"rules={args.rules} remat={args.remat}", flush=True)
+        try:
+            res = run_cell(a, s, multi_pod=args.multi_pod,
+                           rules_name=args.rules, remat=args.remat,
+                           attn_impl=args.attn)
+            path = save_result(res, args.tag)
+            if "skipped" in res:
+                print(f"  -> skipped: {res['skipped']}")
+            else:
+                r = res["roofline"]
+                print(f"  -> ok in {res['compile_s']}s compile | "
+                      f"compute {r['compute_s']:.3e}s memory "
+                      f"{r['memory_s']:.3e}s coll {r['collective_s']:.3e}s"
+                      f" dominant={r['dominant']} ({path})", flush=True)
+        except Exception as e:
+            print(f"  -> FAIL {type(e).__name__}: {e}")
+            traceback.print_exc()
+            res = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            save_result(res, args.tag)
+
+
+if __name__ == "__main__":
+    main()

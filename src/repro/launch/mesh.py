@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  The dry-run builds these over
+512 forced host devices; real launches build them over the slice's TPU
+devices — same shapes, same axis names.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) over 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) over 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh over however many (host) devices a test forced."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,127 @@
+"""Training driver: data-parallel/jit train loop with delta-based
+checkpointing, historical metric logging, failure recovery, and
+straggler-policy hooks.
+
+CPU-scale usage (the e2e example wraps this):
+  python -m repro.launch.train --arch smollm-360m --steps 200 \
+      --reduced --batch 8 --seq 128 --ckpt /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (DeltaCheckpointStore, DeltaPolicy, HistoryLog,
+                              tensor_measures)
+from repro.config import ShardingConfig, TrainConfig, reduced
+from repro.configs import ARCHS, get_config
+from repro.data import SyntheticLM
+from repro.runtime import (FailureInjector, InjectedFailure, TrainState,
+                           init_train_state, make_train_step,
+                           run_with_recovery)
+from repro.runtime.stragglers import StragglerPolicy
+
+
+def train(cfg, tcfg: TrainConfig, scfg: ShardingConfig, *,
+          ckpt_dir: str | None = None, ckpt_every: int = 20,
+          policy: DeltaPolicy | None = None,
+          injector: FailureInjector | None = None,
+          history: HistoryLog | None = None,
+          log_every: int = 10, straggler: StragglerPolicy | None = None,
+          log_tensor_norms: bool = False):
+    """Returns (final TrainState, HistoryLog, DeltaCheckpointStore|None).
+
+    Recovery contract: if any step raises, re-enter with the store's
+    latest state (runtime/failures.py) — this function does exactly
+    that internally when a checkpoint store is present.
+    """
+    data = SyntheticLM(cfg, tcfg.global_batch, tcfg.seq_len,
+                       seed=tcfg.seed)
+    step_fn = jax.jit(make_train_step(cfg, tcfg, scfg))
+    store = (DeltaCheckpointStore(ckpt_dir, policy)
+             if ckpt_dir else None)
+    history = history or HistoryLog()
+    template = None
+
+    def loop(start_step: int) -> TrainState:
+        nonlocal template
+        if start_step == 0 or store is None or \
+                store.latest_step() is None:
+            state = init_train_state(jax.random.PRNGKey(tcfg.seed), cfg,
+                                     tcfg)
+        else:
+            if template is None:
+                template = jax.eval_shape(
+                    lambda: init_train_state(jax.random.PRNGKey(tcfg.seed),
+                                             cfg, tcfg))
+            state = store.restore(store.latest_step(), template)
+            start_step = int(jax.device_get(state.step))
+        for step in range(start_step, tcfg.total_steps):
+            if injector is not None:
+                injector.check(step)
+            t0 = time.time()
+            batch = data.batch_at(step)
+            state, metrics = step_fn(state, batch)
+            dt_ms = (time.time() - t0) * 1e3
+            if step % log_every == 0 or step == tcfg.total_steps - 1:
+                m = {k: float(jax.device_get(v))
+                     for k, v in metrics.items()}
+                m["step_ms"] = dt_ms
+                if log_tensor_norms:
+                    m.update(tensor_measures(state.params))
+                history.record(step, m)
+            if store is not None and step % ckpt_every == 0:
+                store.save(step, state)
+            if straggler is not None:
+                straggler.observe(dt_ms, tcfg.microbatches)
+        if store is not None:
+            store.save(tcfg.total_steps - 1, state)
+        return state
+
+    if store is not None:
+        from repro.runtime.failures import run_with_recovery
+        state = run_with_recovery(loop, store, template)
+    else:
+        state = loop(0)
+    return state, history, store
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--policy", default="periodic",
+                    choices=["periodic", "opcount", "similarity"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                       lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1),
+                       param_dtype="float32")
+    scfg = ShardingConfig()
+    t0 = time.time()
+    state, history, store = train(
+        cfg, tcfg, scfg, ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every, policy=DeltaPolicy(kind=args.policy))
+    first = history.rows["loss"][0]
+    last = history.rows["loss"][-1]
+    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s | "
+          f"loss {first:.4f} -> {last:.4f}")
+    if store is not None:
+        print("checkpoint storage:", store.storage_bytes())
+
+
+if __name__ == "__main__":
+    main()

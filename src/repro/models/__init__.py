@@ -1,0 +1,7 @@
+from repro.models import api, attention, blocks, encdec, layers, lm, moe, ssm
+from repro.models.api import (decode_step, forward, init_decode_caches,
+                              init_params, input_specs, loss_fn, prefill)
+
+__all__ = ["api", "attention", "blocks", "encdec", "layers", "lm", "moe",
+           "ssm", "decode_step", "forward", "init_decode_caches",
+           "init_params", "input_specs", "loss_fn", "prefill"]

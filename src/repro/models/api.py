@@ -1,0 +1,93 @@
+"""Unified model API over all families.
+
+  init_params(key, cfg, dtype)                  → params
+  loss_fn(params, batch, cfg, ...)              → scalar loss
+  prefill(params, batch, cfg, cache_cap)        → (logits, caches)
+  decode_step(params, token, pos, caches, cfg)  → (logits, caches)
+  init_decode_caches(cfg, batch, cache_len)     → caches
+  input_specs(cfg, shape)                       → ShapeDtypeStructs
+
+Batches are dicts: tokens/labels (+ frames for encdec, patches for vlm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg, dtype)
+    return lm.init_params(key, cfg, dtype)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, impl="xla",
+            remat="block"):
+    if cfg.family == "encdec":
+        return encdec.loss_fn(params, batch, cfg, remat=remat)
+    extra = {"patches": batch["patches"]} if cfg.family == "vlm" else None
+    return lm.loss_fn(params, batch, cfg, extra=extra, impl=impl,
+                      remat=remat)
+
+
+def forward(params, batch, cfg: ModelConfig, *, impl="xla", remat="none"):
+    if cfg.family == "encdec":
+        enc = encdec.encode(params, batch["frames"], cfg, remat)
+        return encdec.decode_seq(params, batch["tokens"], enc, cfg, remat)
+    extra = {"patches": batch["patches"]} if cfg.family == "vlm" else None
+    return lm.forward(params, batch["tokens"], cfg, extra=extra,
+                      impl=impl, remat=remat)
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_cap=None, impl="xla"):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, batch["tokens"], batch["frames"],
+                              cfg, cache_cap)
+    extra = {"patches": batch["patches"]} if cfg.family == "vlm" else None
+    return lm.prefill(params, batch["tokens"], cfg, extra=extra,
+                      cache_cap=cache_cap, impl=impl)
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, token, pos, caches, cfg)
+    return lm.decode_step(params, token, pos, caches, cfg)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return encdec.init_decode_caches(cfg, batch, cache_len, dtype)
+    return lm.init_decode_caches(cfg, batch, cache_len, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run
+    cell (weak-type-correct, shardable, no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one token against a cache of length s
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}

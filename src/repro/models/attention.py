@@ -1,0 +1,258 @@
+"""Attention: GQA/MQA, causal/full/sliding-window, self/cross, with KV
+caches for decode (ring buffer under SWA, sequence-sharded for long
+contexts).
+
+Two compute paths:
+* ``impl='xla'``  — einsum + masked softmax.  Fully differentiable and
+  shardable; what the dry-run lowers (TPU Pallas doesn't lower on the
+  CPU backend).
+* ``impl='pallas'`` — the flash-attention kernel (forward) with a
+  reference backward (kernels/flash_attention/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _normal, rope
+from repro.sharding import shard
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": _normal(ks[0], (d, hq, hd), s, dtype),
+        "wk": _normal(ks[1], (d, hkv, hd), s, dtype),
+        "wv": _normal(ks[2], (d, hkv, hd), s, dtype),
+        "wo": _normal(ks[3], (hq, hd, d), (hq * hd) ** -0.5, dtype),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """k/v: [B, S_cap, Hkv, hd]; pos_map: absolute position of each cache
+    row (−1 = empty) — makes ring-buffer SWA caches and full caches share
+    one masking rule."""
+    k: jax.Array
+    v: jax.Array
+    pos_map: jax.Array  # i32[S_cap]
+
+    @property
+    def cap(self) -> int:
+        return self.k.shape[1]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    cap = max_len if cfg.window is None else min(max_len, cfg.window)
+    return KVCache(
+        k=jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), dtype),
+        v=jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.hd()), dtype),
+        pos_map=jnp.full((cap,), -1, jnp.int32),
+    )
+
+
+def _mask(qpos, kpos, causal: bool, window: int | None):
+    """qpos: [Sq], kpos: [Skv] (−1 = invalid) → bool [Sq, Skv]."""
+    m = kpos[None, :] >= 0
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        m = m & (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: [B,Sq,Hq,hd], k/v: [B,Skv,Hkv,hd], mask: [Sq,Skv]."""
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def _sdpa_flash_xla(q, k, v, positions, kpos, causal, window, scale,
+                    block: int = 1024):
+    """Flash-style attention in pure XLA: lax.scan over KV blocks with
+    an online softmax.  Never materializes the [Sq, Skv] score tensor —
+    per-step temporaries are [B, H, Sq, block] — so the HBM-traffic
+    roofline term drops from O(Sq·Skv) to O(Sq·block) per pass.  This is
+    the dry-run-lowerable counterpart of the Pallas flash kernel (the
+    kernel is used on real TPUs; this path compiles on any backend).
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    pad = (-skv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    nk = k.shape[1] // block
+    qg = (q.reshape(b, sq, hkv, group, hd).astype(jnp.float32)
+          * scale)
+    kb = k.reshape(b, nk, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block, hkv, hd).transpose(1, 0, 2, 3, 4)
+    pb = kpos.reshape(nk, block)
+
+    def body(carry, xs):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, posblk = xs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
+                       kblk.astype(jnp.float32))
+        msk = posblk[None, :] >= 0
+        if causal:
+            msk = msk & (posblk[None, :] <= positions[:, None])
+        if window is not None:
+            msk = msk & (posblk[None, :] > positions[:, None] - window)
+        msk = msk[None, :, None, None, :]
+        s = jnp.where(msk, s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.where(msk, jnp.exp(s - m_safe[..., None]), 0.0)
+        alpha = jnp.where(jnp.isneginf(m_prev), 0.0,
+                          jnp.exp(m_prev - m_safe))
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = (acc * alpha[..., None]
+               + jnp.einsum("bqhgk,bkhd->bqhgd", p,
+                            vblk.astype(jnp.float32)))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, sq, hkv, group), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, group), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hkv, group, hd), jnp.float32)
+    # checkpoint the body: scan-backward otherwise saves every block's
+    # score/probability tensors — in sum, the full S² materialization
+    # the flash formulation exists to avoid
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable,
+        prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, pb))
+    o = acc / jnp.where(l > 0, l, 1.0)[..., None]
+    return o.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+              causal: bool = True, positions: jax.Array | None = None,
+              kv_x: jax.Array | None = None, use_rope: bool = True,
+              impl: str = "xla", make_cache: bool = False,
+              cache_cap: int | None = None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (out, cache | None).  ``kv_x`` switches to cross-attention
+    (keys/values from the encoder sequence, no rope, no causal mask).
+    """
+    b, s, d = x.shape
+    hd = cfg.hd()
+    src = kv_x if kv_x is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    if use_rope and kv_x is None and cfg.pos_kind == "rope":
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+
+    kpos = (jnp.arange(src.shape[1], dtype=jnp.int32)
+            if kv_x is not None else positions)
+    window = cfg.window if kv_x is None else None
+
+    if impl == "pallas" and kv_x is None:
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3),
+                            causal, window, hd ** -0.5)
+        o = o.transpose(0, 2, 1, 3)
+    elif impl == "xla_flash" and kv_x is None:
+        o = _sdpa_flash_xla(q, k, v, positions, kpos,
+                            causal, window, hd ** -0.5)
+    else:
+        mask = _mask(positions, kpos, causal and kv_x is None, window)
+        o = _sdpa(q, k, v, mask, hd ** -0.5)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    out = shard(out, "batch", None, None)
+
+    cache = None
+    if make_cache:
+        cap = cache_cap or s
+        cache = init_cache(cfg, b, cap, k.dtype)
+        ccap = cache.cap
+        if cfg.window is None or s <= ccap:
+            take = min(s, ccap)
+            cache = KVCache(
+                k=jax.lax.dynamic_update_slice_in_dim(
+                    cache.k, k[:, :take], 0, axis=1),
+                v=jax.lax.dynamic_update_slice_in_dim(
+                    cache.v, v[:, :take], 0, axis=1),
+                pos_map=jnp.where(jnp.arange(ccap) < take,
+                                  jnp.arange(ccap, dtype=jnp.int32), -1))
+        else:
+            # SWA ring buffer: keep the last `ccap` keys at slot pos % cap
+            last = positions[-1]
+            idx = (jnp.arange(ccap, dtype=jnp.int32)
+                   + (last + 1)) % ccap  # slots in absolute order
+            src_pos = s - ccap + jnp.arange(ccap)
+            cache = KVCache(
+                k=cache.k.at[:, idx].set(k[:, src_pos]),
+                v=cache.v.at[:, idx].set(v[:, src_pos]),
+                pos_map=jnp.zeros((ccap,), jnp.int32).at[idx].set(
+                    positions[src_pos]))
+    return out, cache
+
+
+def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                     cache: KVCache, pos: jax.Array, *,
+                     kv_cache_static: bool = False):
+    """One-token self-attention step.  x: [B, 1, d]; pos: scalar absolute
+    position of the new token.  Returns (out, new_cache).
+
+    ``kv_cache_static=True`` skips the cache write (cross-attention
+    caches are static).  The KV cache's sequence dim may be sharded
+    (logical axis ``kv_seq``) — the softmax reductions then run as
+    cross-shard collectives inserted by GSPMD.
+    """
+    b = x.shape[0]
+    hd = cfg.hd()
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.pos_kind == "rope" and not kv_cache_static:
+        q = rope(q, jnp.full((1, 1), pos, jnp.int32), cfg.rope_theta)
+
+    if not kv_cache_static:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if cfg.pos_kind == "rope":
+            k_new = rope(k_new, jnp.full((1, 1), pos, jnp.int32),
+                         cfg.rope_theta)
+        slot = pos % cache.cap
+        cache = KVCache(
+            k=jax.lax.dynamic_update_slice(
+                cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0)),
+            v=jax.lax.dynamic_update_slice(
+                cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0)),
+            pos_map=jax.lax.dynamic_update_slice(
+                cache.pos_map, pos[None].astype(jnp.int32), (slot,)))
+
+    k, v = cache.k, cache.v
+    k = shard(k, "batch", "kv_seq", None, None)
+    v = shard(v, "batch", "kv_seq", None, None)
+    mask = _mask(pos[None], cache.pos_map, True, cfg.window)
+    o = _sdpa(q, k, v, mask, hd ** -0.5)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, cache

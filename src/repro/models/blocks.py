@@ -1,0 +1,141 @@
+"""Layer blocks: (mixer, ffn) pairs composed per the config's pattern.
+
+A *group* is the config's repeating pattern of layers (dense: 1 layer;
+Jamba: 8 layers — 1 attention + 7 mamba, MoE on every 2nd layer).  The
+LM scans over stacked group params, so HLO size is O(period), not
+O(n_layers).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe
+
+
+def layer_kinds(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """[(mixer, ffn)] for each layer in one period."""
+    period = group_size(cfg)
+    out = []
+    for i in range(period):
+        if cfg.family in ("ssm",):
+            mixer = "ssm"
+        elif cfg.family == "hybrid":
+            mixer = "attn" if i % cfg.attn_period == cfg.attn_offset \
+                else "ssm"
+        else:
+            mixer = "attn"
+        if cfg.n_experts and (i % cfg.moe_every == cfg.moe_every - 1):
+            ffn = "moe"
+        elif mixer == "ssm" and cfg.d_ff == 0:
+            ffn = "none"           # pure mamba blocks have no FFN
+        else:
+            ffn = "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def group_size(cfg: ModelConfig) -> int:
+    period = 1
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+    if cfg.n_experts:
+        period = max(period, cfg.moe_every)
+    return period
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    g = group_size(cfg)
+    assert cfg.n_layers % g == 0, (cfg.n_layers, g)
+    return cfg.n_layers // g
+
+
+def init_group(key, cfg: ModelConfig, dtype) -> dict:
+    params: dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(layer_kinds(cfg)):
+        k = jax.random.fold_in(key, i)
+        lp: dict[str, Any] = {"norm1": init_norm(cfg, dtype)}
+        if mixer == "attn":
+            lp["attn"] = A.init_attention(jax.random.fold_in(k, 0), cfg,
+                                          dtype)
+        else:
+            lp["ssm"] = S.init_ssm(jax.random.fold_in(k, 1), cfg, dtype)
+        if ffn != "none":
+            lp["norm2"] = init_norm(cfg, dtype)
+        if ffn == "moe":
+            lp["moe"] = init_moe(jax.random.fold_in(k, 2), cfg, dtype)
+        elif ffn == "mlp":
+            lp["mlp"] = init_mlp(jax.random.fold_in(k, 3), cfg, dtype)
+        params[f"l{i}"] = lp
+    return params
+
+
+def init_group_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    """Cache pytree for one group (same structure the scan stacks)."""
+    caches = {}
+    for i, (mixer, _) in enumerate(layer_kinds(cfg)):
+        if mixer == "attn":
+            caches[f"l{i}"] = A.init_cache(cfg, batch, cache_len, dtype)
+        else:
+            caches[f"l{i}"] = S.init_ssm_cache(cfg, batch, dtype)
+    return caches
+
+
+def apply_group(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                positions=None, impl: str = "xla",
+                make_cache: bool = False, cache_cap: int | None = None,
+                init_caches=None):
+    """Full-sequence pass over one group. Returns (x, caches|None)."""
+    caches = {} if make_cache else None
+    for i, (mixer, ffn) in enumerate(layer_kinds(cfg)):
+        lp = params[f"l{i}"]
+        h = apply_norm(lp["norm1"], x, cfg.norm_kind)
+        if mixer == "attn":
+            mixed, c = A.attention(lp["attn"], h, cfg, causal=True,
+                                   positions=positions, impl=impl,
+                                   make_cache=make_cache,
+                                   cache_cap=cache_cap)
+        else:
+            prev = (init_caches[f"l{i}"]
+                    if init_caches is not None else None)
+            mixed, c = S.apply_ssm(lp["ssm"], h, cfg, cache=prev,
+                                   return_cache=make_cache)
+        x = x + mixed
+        if ffn != "none":
+            h = apply_norm(lp["norm2"], x, cfg.norm_kind)
+            if ffn == "moe":
+                x = x + apply_moe(lp["moe"], h, cfg)
+            else:
+                x = x + apply_mlp(lp["mlp"], h, cfg.mlp_kind)
+        if make_cache:
+            caches[f"l{i}"] = c
+    return x, caches
+
+
+def decode_group(params: dict, x: jax.Array, cfg: ModelConfig,
+                 caches: dict, pos):
+    """One-token step over one group. Returns (x, new_caches)."""
+    new = {}
+    for i, (mixer, ffn) in enumerate(layer_kinds(cfg)):
+        lp = params[f"l{i}"]
+        h = apply_norm(lp["norm1"], x, cfg.norm_kind)
+        if mixer == "attn":
+            mixed, c = A.decode_attention(lp["attn"], h, cfg,
+                                          caches[f"l{i}"], pos)
+        else:
+            mixed, c = S.decode_ssm(lp["ssm"], h, cfg, caches[f"l{i}"])
+        x = x + mixed
+        if ffn != "none":
+            h = apply_norm(lp["norm2"], x, cfg.norm_kind)
+            if ffn == "moe":
+                x = x + apply_moe(lp["moe"], h, cfg)
+            else:
+                x = x + apply_mlp(lp["mlp"], h, cfg.mlp_kind)
+        new[f"l{i}"] = c
+    return x, new

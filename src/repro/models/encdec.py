@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs``
+feeds precomputed frame embeddings [B, enc_seq, d_model] (what the two
+conv layers would produce).  Encoder: bidirectional attention +
+sinusoidal positions.  Decoder: causal self-attention (learned
+positions) + cross-attention to the encoder output + GELU MLP.
+Decode caches: self-KV (ring-free, full) + static cross-KV computed
+once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models.layers import (apply_mlp, apply_norm, embed, init_embed,
+                                 init_mlp, init_norm, sinusoidal, unembed)
+from repro.sharding import shard
+
+
+def _enc_layer_init(key, cfg, dtype):
+    return {"norm1": init_norm(cfg, dtype),
+            "attn": A.init_attention(jax.random.fold_in(key, 0), cfg, dtype),
+            "norm2": init_norm(cfg, dtype),
+            "mlp": init_mlp(jax.random.fold_in(key, 1), cfg, dtype)}
+
+
+def _dec_layer_init(key, cfg, dtype):
+    return {"norm1": init_norm(cfg, dtype),
+            "attn": A.init_attention(jax.random.fold_in(key, 0), cfg, dtype),
+            "norm_x": init_norm(cfg, dtype),
+            "xattn": A.init_attention(jax.random.fold_in(key, 1), cfg,
+                                      dtype),
+            "norm2": init_norm(cfg, dtype),
+            "mlp": init_mlp(jax.random.fold_in(key, 2), cfg, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    ek = jax.random.split(jax.random.fold_in(key, 3), cfg.n_enc_layers)
+    dk = jax.random.split(jax.random.fold_in(key, 4), cfg.n_layers)
+    return {
+        "embed": init_embed(jax.random.fold_in(key, 1), cfg, dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(ek),
+        "enc_norm": init_norm(cfg, dtype),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dk),
+        "final_norm": init_norm(cfg, dtype),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           remat: str = "block") -> jax.Array:
+    """frames: [B, enc_seq, d] (stub frontend output) → [B, enc_seq, d]."""
+    x = frames + sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(frames.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        a = apply_norm(lp["norm1"], h, cfg.norm_kind)
+        a, _ = A.attention(lp["attn"], a, cfg, causal=False,
+                           positions=positions, use_rope=False)
+        h = h + a
+        m = apply_norm(lp["norm2"], h, cfg.norm_kind)
+        return h + apply_mlp(lp["mlp"], m, cfg.mlp_kind), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_norm(params["enc_norm"], x, cfg.norm_kind)
+
+
+def _dec_layer(lp, h, cfg, enc_out, positions, make_cache, cache_cap):
+    a = apply_norm(lp["norm1"], h, cfg.norm_kind)
+    a, self_c = A.attention(lp["attn"], a, cfg, causal=True,
+                            positions=positions, use_rope=False,
+                            make_cache=make_cache, cache_cap=cache_cap)
+    h = h + a
+    c = apply_norm(lp["norm_x"], h, cfg.norm_kind)
+    c, _ = A.attention(lp["xattn"], c, cfg, causal=False, kv_x=enc_out,
+                       positions=positions)
+    h = h + c
+    m = apply_norm(lp["norm2"], h, cfg.norm_kind)
+    h = h + apply_mlp(lp["mlp"], m, cfg.mlp_kind)
+    return h, self_c
+
+
+def decode_seq(params, tokens, enc_out, cfg: ModelConfig,
+               remat: str = "block"):
+    """Teacher-forced decoder pass → logits [B, S, V]."""
+    x = embed(params["embed"], tokens, cfg,
+              positions=jnp.arange(tokens.shape[1]))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def body(h, lp):
+        h, _ = _dec_layer(lp, h, cfg, enc_out, positions, False, None)
+        return h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    return unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: str = "block"):
+    enc_out = encode(params, batch["frames"], cfg, remat)
+    logits = decode_seq(params, batch["tokens"], enc_out, cfg, remat)
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(lp, batch["labels"][:, 1:, None],
+                               -1)[..., 0]
+    return jnp.mean(nll)
+
+
+def prefill(params, tokens, frames, cfg: ModelConfig,
+            cache_cap: int | None = None):
+    """Run encoder + teacher-forced decoder prefix; build caches.
+
+    Returns (last logits [B, V], caches) where caches = dict with
+    stacked self-KV caches and static cross-KV tensors per layer."""
+    enc_out = encode(params, frames, cfg, remat="none")
+    x = embed(params["embed"], tokens, cfg,
+              positions=jnp.arange(tokens.shape[1]))
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    cap = cache_cap or tokens.shape[1]
+
+    def body(h, lp):
+        h, self_c = _dec_layer(lp, h, cfg, enc_out, positions, True, cap)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+        return h, {"self": self_c, "xk": xk, "xv": xv}
+
+    x, caches = jax.lax.scan(body, x, params["dec"])
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    return unembed(params["embed"], x[:, -1], cfg), caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16):
+    def one():
+        return {"self": A.init_cache(cfg, batch, cache_len, dtype),
+                "xk": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                 cfg.hd()), dtype),
+                "xv": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                 cfg.hd()), dtype)}
+    return jax.tree.map(lambda *ls: jnp.stack(ls),
+                        *[one() for _ in range(cfg.n_layers)])
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    """One decoder token step against cached self/cross KV."""
+    x = embed(params["embed"], token, cfg,
+              positions=jnp.full((1,), pos, jnp.int32))
+
+    def body(h, xs):
+        lp, cache = xs
+        a = apply_norm(lp["norm1"], h, cfg.norm_kind)
+        a, self_c = A.decode_attention(lp["attn"], a, cfg, cache["self"],
+                                       pos)
+        h = h + a
+        c = apply_norm(lp["norm_x"], h, cfg.norm_kind)
+        xc = A.KVCache(k=cache["xk"], v=cache["xv"],
+                       pos_map=jnp.arange(cache["xk"].shape[1],
+                                          dtype=jnp.int32))
+        cq = jnp.einsum("bsd,dhk->bshk", c, lp["xattn"]["wq"])
+        o = A._sdpa(cq, xc.k, xc.v,
+                    jnp.ones((1, xc.k.shape[1]), bool), cfg.hd() ** -0.5)
+        c = jnp.einsum("bshk,hkd->bsd", o, lp["xattn"]["wo"])
+        h = h + c
+        m = apply_norm(lp["norm2"], h, cfg.norm_kind)
+        h = h + apply_mlp(lp["mlp"], m, cfg.mlp_kind)
+        return h, {"self": self_c, "xk": cache["xk"], "xv": cache["xv"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    return unembed(params["embed"], x[:, -1], cfg), new_caches

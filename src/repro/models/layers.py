@@ -1,0 +1,136 @@
+"""Shared NN layers: norms, positional encodings, MLP variants.
+
+Params are plain nested dicts of jnp arrays; every init function takes
+an explicit PRNG key.  Compute dtype is the input dtype; norms and
+softmax accumulate in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    if cfg.norm_kind == "ln_nonparam":      # OLMo: non-parametric LN
+        return {}
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm_kind == "ln":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "ln":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(
+            jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D] (D even); positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def sinusoidal(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {"w_gate": _normal(k1, (d, f), scale_in, dtype),
+                "w_up": _normal(k2, (d, f), scale_in, dtype),
+                "w_down": _normal(k3, (f, d), scale_out, dtype)}
+    return {"w_up": _normal(k1, (d, f), scale_in, dtype),
+            "w_down": _normal(k2, (f, d), scale_out, dtype)}
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        return (act * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig, dtype) -> dict:
+    p = {"tok": _normal(key, (cfg.vocab, cfg.d_model), 0.02, dtype)}
+    if cfg.pos_kind == "learned":
+        p["pos"] = _normal(jax.random.fold_in(key, 1),
+                           (cfg.max_seq, cfg.d_model), 0.02, dtype)
+    if not cfg.tie_embeddings:
+        p["unembed"] = _normal(jax.random.fold_in(key, 2),
+                               (cfg.d_model, cfg.vocab),
+                               cfg.d_model ** -0.5, dtype)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ModelConfig,
+          positions: jax.Array | None = None) -> jax.Array:
+    x = p["tok"][tokens]
+    if cfg.pos_kind == "learned":
+        assert positions is not None
+        x = x + p["pos"][positions]
+    elif cfg.pos_kind == "sinusoidal":
+        assert positions is not None
+        x = x + sinusoidal(cfg.max_seq, cfg.d_model,
+                           x.dtype)[positions]
+    return x
+
+
+def unembed(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,141 @@
+"""Decoder-only LM (dense / MoE / SSM / hybrid / VLM) with
+scan-over-groups layer stacking, remat, KV/SSM caches, and the three
+step entry points (forward, prefill, decode).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShardingConfig
+from repro.models import blocks as B
+from repro.models.layers import (apply_norm, embed, init_embed, init_norm,
+                                 unembed, _normal)
+from repro.sharding import shard
+
+
+def init_params(key, cfg: ModelConfig,
+                dtype=jnp.bfloat16) -> dict[str, Any]:
+    ng = B.n_groups(cfg)
+    keys = jax.random.split(jax.random.fold_in(key, 17), ng)
+    groups = jax.vmap(lambda k: B.init_group(k, cfg, dtype))(keys)
+    p = {"embed": init_embed(jax.random.fold_in(key, 1), cfg, dtype),
+         "groups": groups,
+         "final_norm": init_norm(cfg, dtype)}
+    if cfg.family == "vlm":
+        p["patch_proj"] = _normal(jax.random.fold_in(key, 2),
+                                  (cfg.d_model, cfg.d_model),
+                                  cfg.d_model ** -0.5, dtype)
+    return p
+
+
+def _scan_groups(params, x, cfg: ModelConfig, body, length: int,
+                 remat: str = "block", xs=None):
+    if remat in ("block", "full"):
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if remat == "full" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    carry, ys = jax.lax.scan(body, x, (params["groups"], xs)
+                             if xs is not None else params["groups"],
+                             length=length)
+    return carry, ys
+
+
+def forward(params, tokens, cfg: ModelConfig, *, extra=None,
+            impl: str = "xla", remat: str = "block"):
+    """Training/eval forward: tokens [B, S] → logits [B, S, V].
+
+    ``extra``: dict of modality-stub inputs — ``patches`` [B, P, d] for
+    vlm (prepended after projection)."""
+    tokens = shard(tokens, "batch", None)
+    x = embed(params["embed"], tokens, cfg,
+              positions=jnp.arange(tokens.shape[1]))
+    n_prefix = 0
+    if cfg.family == "vlm":
+        patches = extra["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+        n_prefix = patches.shape[1]
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, gp):
+        h, _ = B.apply_group(gp, h, cfg, positions=positions, impl=impl)
+        return h, None
+
+    x, _ = _scan_groups(params, x, cfg, body, B.n_groups(cfg), remat)
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = unembed(params["embed"], x, cfg)
+    return shard(logits, "batch", None, "model")
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, extra=None,
+            impl: str = "xla", remat: str = "block"):
+    """Next-token cross entropy (mean over non-masked positions)."""
+    tokens = batch["tokens"]
+    logits = forward(params, tokens, cfg, extra=extra, impl=impl,
+                     remat=remat)
+    targets = batch["labels"]
+    mask = batch.get("mask")
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[:, 1:, None], axis=-1)[..., 0]
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def prefill(params, tokens, cfg: ModelConfig, *, extra=None,
+            cache_cap: int | None = None, impl: str = "xla"):
+    """Build caches for decode. Returns (last_logits [B, V], caches)."""
+    tokens = shard(tokens, "batch", None)
+    x = embed(params["embed"], tokens, cfg,
+              positions=jnp.arange(tokens.shape[1]))
+    if cfg.family == "vlm":
+        patches = extra["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    cap = cache_cap or x.shape[1]
+
+    def body(h, gp):
+        h, caches = B.apply_group(gp, h, cfg, positions=positions,
+                                  impl=impl, make_cache=True,
+                                  cache_cap=cap)
+        return h, caches
+
+    x, caches = _scan_groups(params, x, cfg, body, B.n_groups(cfg), "none")
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    logits = unembed(params["embed"], x[:, -1], cfg)
+    return logits, caches
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16):
+    """Empty stacked caches (for serve_step dry-runs: the decode-shape
+    cells lower a step against a full-length cache without prefilling)."""
+    one = lambda: B.init_group_cache(cfg, batch, cache_len, dtype)
+    return jax.tree.map(
+        lambda *ls: jnp.stack(ls), *[one() for _ in range(B.n_groups(cfg))])
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    """One decode step. token: [B, 1] int32; pos: scalar absolute
+    position; caches: stacked group caches. → (logits [B, V], caches)."""
+    x = embed(params["embed"], token, cfg,
+              positions=jnp.full((1,), pos, jnp.int32))
+    x = shard(x, "batch", None, None)
+
+    def body(h, xs):
+        gp, cache = xs
+        h, new = B.decode_group(gp, h, cfg, cache, pos)
+        return h, new
+
+    x, new_caches = jax.lax.scan(body, x, (params["groups"], caches))
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind)
+    logits = unembed(params["embed"], x[:, -1], cfg)
+    return logits, new_caches

@@ -1,0 +1,245 @@
+"""Mamba2 (SSD — state-space duality) blocks, attention-free sequence
+mixing.
+
+The SSD recurrence per head (state N = cfg.ssm_state, headdim P):
+
+    h_t = exp(a·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t        (h: [P, N])
+    y_t = C_t · h_t + D · x_t
+
+computed with the *chunked* dual form: within a chunk of length Q the
+quadratic "attention-like" term runs on the MXU; chunk-to-chunk state is
+a short ``lax.scan``.  Decode is the O(1) recurrence on a carried
+(conv_state, ssm_state) cache — this is why SSM archs run the
+``long_500k`` shape: no KV cache grows with context.
+
+``ssd_sequential`` (per-step scan) is the correctness oracle for
+``ssd_chunked`` in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import _normal
+from repro.sharding import shard
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.d_inner()
+    nh = cfg.ssm_nheads()
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n  # x, B, C go through the causal conv
+    ks = jax.random.split(key, 6)
+    # in_proj emits [z (d_in), x (d_in), B (n), C (n), dt (nh)]
+    d_proj = 2 * d_in + 2 * n + nh
+    return {
+        "in_proj": _normal(ks[0], (d, d_proj), d ** -0.5, dtype),
+        "conv": _normal(ks[1], (cfg.ssm_conv, conv_dim),
+                        cfg.ssm_conv ** -0.5, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": _normal(ks[2], (d_in, d), d_in ** -0.5, dtype),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMCache:
+    conv: jax.Array   # [B, conv_w − 1, conv_dim]
+    state: jax.Array  # [B, nh, P, N] (float32)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    d_in = cfg.d_inner()
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, cfg.ssm_nheads(), cfg.ssm_headdim,
+                         cfg.ssm_state), jnp.float32))
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_in = cfg.d_inner()
+    n = cfg.ssm_state
+    nh = cfg.ssm_nheads()
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * n]
+    dt = proj[..., d_in + d_in + 2 * n:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, prev=None):
+    """Depthwise causal conv over [B, S, C] with kernel [W, C]."""
+    w = conv_w.shape[0]
+    if prev is None:
+        pad = jnp.zeros_like(xbc[:, : w - 1])
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i][None, None]
+              for i in range(w))
+    new_prev = xp[:, xp.shape[1] - (w - 1):]
+    return jax.nn.silu(out), new_prev
+
+
+def ssd_sequential(x, dt, a, B, C, state0=None):
+    """Oracle: per-step recurrence.
+    x: [b,s,nh,P]; dt: [b,s,nh]; a: [nh]; B,C: [b,s,N] (single group).
+    Returns y: [b,s,nh,P], final state [b,nh,P,N]."""
+    b, s, nh, p = x.shape
+    n = B.shape[-1]
+    h0 = (jnp.zeros((b, nh, p, n), jnp.float32)
+          if state0 is None else state0)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [b,nh,P], [b,nh], [b,N], [b,N]
+        decay = jnp.exp(dtt * a[None, :])[..., None, None]
+        upd = (dtt[..., None, None] * xt[..., None]
+               * bt[:, None, None, :])
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssd_chunked(x, dt, a, B, C, chunk: int, state0=None):
+    """Chunked SSD (dual form). Same signature as ssd_sequential."""
+    b, s, nh, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xc = x.reshape(b, nc, q, nh, p)
+    dtc = dt.reshape(b, nc, q, nh)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    ad = dtc * a[None, None, None, :]              # [b,nc,q,nh] (≤0)
+    cum = jnp.cumsum(ad, axis=2)                   # within-chunk cumsum
+
+    # intra-chunk (quadratic, MXU): y_ij = C_i·B_j · exp(cum_i − cum_j)
+    #   · dt_j · x_j   for j ≤ i
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)     # [b,nc,q,q]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,i,j,nh]
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: upper-triangle seg is positive-large, and
+    # where(mask, exp(seg), 0) would leak inf into the backward pass
+    decay = jnp.exp(jnp.where(tri, seg, 0.0)) * tri
+    lmat = cb[..., None] * decay                   # [b,nc,i,j,nh]
+    dx = dtc[..., None] * xc                       # [b,nc,q,nh,p]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", lmat, dx)
+
+    # chunk states: S_c = Σ_j exp(cum_last − cum_j) dt_j x_j ⊗ B_j
+    last = cum[:, :, -1:, :]                       # [b,nc,1,nh]
+    decay_to_end = jnp.exp(last - cum)             # [b,nc,q,nh]
+    sc = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", decay_to_end * dtc, xc, Bc)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(last[:, :, 0, :])        # [b,nc,nh]
+    h0 = (jnp.zeros((b, nh, p, n), jnp.float32)
+          if state0 is None else state0)
+
+    def step(h, inp):
+        s_c, dec = inp                             # [b,nh,p,n], [b,nh]
+        h_in = h                                   # state entering chunk
+        h = h * dec[..., None, None] + s_c
+        return h, h_in
+
+    hs, h_ins = jax.lax.scan(
+        step, h0, (sc.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)         # [b,nc,nh,p,n]
+
+    # contribution of the carried state: C_i · exp(cum_i) · h_in
+    y_inter = jnp.einsum("bcin,bcihpn->bcihp",
+                         Cc, jnp.exp(cum)[..., None, None]
+                         * h_ins[:, :, None])
+    y = (y_intra + y_inter).reshape(b, s, nh, p)
+    return y, hs
+
+
+def apply_ssm(p: dict, x: jax.Array, cfg: ModelConfig,
+              cache: SSMCache | None = None, return_cache: bool = False):
+    """Full-sequence Mamba2 block. x: [B, S, d] → [B, S, d]."""
+    b, s, d = x.shape
+    d_in = cfg.d_inner()
+    nh, pd, n = cfg.ssm_nheads(), cfg.ssm_headdim, cfg.ssm_state
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = shard(xbc, "batch", None, "model")
+    conv_out, conv_state = _causal_conv(
+        xbc, p["conv"], None if cache is None else cache.conv)
+    xs = conv_out[..., :d_in].reshape(b, s, nh, pd)
+    Bs = conv_out[..., d_in:d_in + n]
+    Cs = conv_out[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])
+    a = -jnp.exp(p["A_log"])
+
+    state0 = None if cache is None else cache.state
+    # pad the sequence to a chunk multiple; padded steps carry dt = 0 so
+    # they leave the SSM state untouched (exp(0·a) = 1, update = 0)
+    q = min(cfg.ssm_chunk, s) if s % min(cfg.ssm_chunk, s) == 0 \
+        else cfg.ssm_chunk
+    pad = (-s) % q
+    xsf = jnp.pad(xs.astype(jnp.float32), ((0, 0), (0, pad), (0, 0),
+                                           (0, 0)))
+    dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Bp = jnp.pad(Bs.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    Cp = jnp.pad(Cs.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    y, h = ssd_chunked(xsf, dtp, a, Bp, Cp, q, state0)
+    y = y[:, :s]
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+
+    # gated RMSNorm (Mamba2)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * p["norm_scale"]
+    out = y @ p["out_proj"]
+    out = shard(out, "batch", None, None)
+    if return_cache:
+        return out, SSMCache(conv=conv_state, state=h)
+    return out, None
+
+
+def decode_ssm(p: dict, x: jax.Array, cfg: ModelConfig, cache: SSMCache):
+    """One-token step. x: [B, 1, d]. O(1) in context length."""
+    b = x.shape[0]
+    d_in = cfg.d_inner()
+    nh, pd, n = cfg.ssm_nheads(), cfg.ssm_headdim, cfg.ssm_state
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    conv_out, conv_state = _causal_conv(xbc, p["conv"], cache.conv)
+    xs = conv_out[..., :d_in].reshape(b, 1, nh, pd)[:, 0]
+    Bs = conv_out[:, 0, d_in:d_in + n]
+    Cs = conv_out[:, 0, d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])[:, 0]  # [b, nh]
+    a = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dt * a[None, :])[..., None, None]
+    upd = (dt[..., None, None] * xs.astype(jnp.float32)[..., None]
+           * Bs.astype(jnp.float32)[:, None, None, :])
+    h = cache.state * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cs.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(x.dtype) * p["norm_scale"]
+    return y @ p["out_proj"], SSMCache(conv=conv_state, state=h)

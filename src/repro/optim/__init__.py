@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compress import (int8_compress, int8_decompress,
+                                  compressed_psum)
+from repro.optim.schedule import lr_schedule
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "lr_schedule",
+           "int8_compress", "int8_decompress", "compressed_psum"]

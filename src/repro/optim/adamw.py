@@ -1,0 +1,109 @@
+"""AdamW from scratch, with selectable optimizer-state dtype.
+
+State dtypes (TrainConfig.opt_state_dtype):
+  float32  — standard
+  bfloat16 — halves optimizer HBM (needed to fit the ≥398B configs;
+             DESIGN.md §5)
+  int8     — block-quantized m/v (per-tensor absmax scale kept in f32);
+             6 bytes/param total with bf16 params — the kimi-k2 1T
+             budget
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QTensor:
+    """int8 tensor with a per-tensor f32 scale."""
+    q: jax.Array
+    scale: jax.Array
+
+    @staticmethod
+    def quantize(x: jax.Array) -> "QTensor":
+        a = jnp.max(jnp.abs(x)) / 127.0
+        a = jnp.where(a > 0, a, 1.0)
+        return QTensor(q=jnp.clip(jnp.round(x / a), -127, 127)
+                       .astype(jnp.int8), scale=a.astype(jnp.float32))
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _store(x, dtype: str):
+    if dtype == "int8":
+        return QTensor.quantize(x)
+    return x.astype(jnp.bfloat16 if dtype == "bfloat16" else jnp.float32)
+
+
+def _load(x):
+    if isinstance(x, QTensor):
+        return x.dequantize()
+    return x.astype(jnp.float32)
+
+
+def adamw_init(params, cfg: TrainConfig) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: _store(jnp.zeros(p.shape, jnp.float32),
+                         cfg.opt_state_dtype), params)
+    zeros2 = jax.tree.map(
+        lambda p: _store(jnp.zeros(p.shape, jnp.float32),
+                         cfg.opt_state_dtype), params)
+    return AdamWState(step=jnp.int32(0), m=zeros, v=zeros2)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: TrainConfig,
+                 lr: jax.Array):
+    """One AdamW step (with global-norm clipping). Returns
+    (new_params, new_state, stats)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    # m/v leaves may be QTensor pytrees — map over params as the
+    # structure reference and fetch m/v leaves via treedef transfer.
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = cfg.b1 * _load(m) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * _load(v) + (1 - cfg.b2) * g32 * g32
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (upd + cfg.weight_decay * p32)
+        new_p.append(p32.astype(p.dtype))
+        new_m.append(_store(m32, cfg.opt_state_dtype))
+        new_v.append(_store(v32, cfg.opt_state_dtype))
+
+    params2 = jax.tree.unflatten(treedef, new_p)
+    state2 = AdamWState(step=step, m=jax.tree.unflatten(treedef, new_m),
+                        v=jax.tree.unflatten(treedef, new_v))
+    return params2, state2, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,15 @@
+"""Linear-warmup + cosine-decay learning-rate schedule."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_schedule(step, cfg: TrainConfig):
+    s = step.astype(jnp.float32)
+    warm = cfg.lr * s / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * cfg.lr * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < cfg.warmup_steps, warm, cos)

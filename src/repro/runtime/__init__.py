@@ -1,0 +1,12 @@
+from repro.runtime.elastic import reshard_from_checkpoint, reshard_state
+from repro.runtime.failures import (FailureInjector, InjectedFailure,
+                                    run_with_recovery)
+from repro.runtime.steps import (TrainState, init_train_state,
+                                 make_decode_step, make_prefill_step,
+                                 make_train_step)
+from repro.runtime.stragglers import StragglerPolicy
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "make_prefill_step", "make_decode_step", "FailureInjector",
+           "InjectedFailure", "run_with_recovery", "reshard_state",
+           "reshard_from_checkpoint", "StragglerPolicy"]

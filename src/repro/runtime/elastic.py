@@ -1,0 +1,26 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints are logical (host arrays keyed by tree path — io.py), so a
+restore onto a new mesh is: load → device_put with the new mesh's
+NamedShardings (sharding/param_specs re-resolves logical axes against
+the new axis sizes, dropping what no longer divides).  The same path
+serves planned rescales (mesh grown/shrunk between jobs) and unplanned
+ones (restart excluding a failed pod: the (2,16,16) job re-lands on
+(16,16)).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding import named_shardings
+
+
+def reshard_state(state, mesh):
+    """Place every leaf of ``state`` per the param rules on ``mesh``."""
+    sh = named_shardings(state, mesh)
+    return jax.tree.map(jax.device_put, state, sh)
+
+
+def reshard_from_checkpoint(store, step, template, mesh):
+    state = store.restore(step, template)
+    return reshard_state(state, mesh)

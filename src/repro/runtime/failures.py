@@ -1,0 +1,55 @@
+"""Failure injection + recovery harness.
+
+On a real cluster, node failure surfaces as a raised exception from the
+collective runtime (or a coordinator timeout).  The training driver's
+contract is: any step may raise; recovery = reconstruct the last logged
+state from the DeltaCheckpointStore (paper Theorem 1 — nearest
+materialized snapshot + delta chain) and resume from its step counter.
+The synthetic-data pipeline is stateless, so the token stream continues
+exactly.
+
+``FailureInjector`` makes that path testable on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises InjectedFailure at the given steps (once each)."""
+    fail_at: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at)
+
+    def check(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise InjectedFailure(f"injected node failure at step {step}")
+
+
+def run_with_recovery(train_loop: Callable[[int], int], store,
+                      template, max_restarts: int = 10) -> int:
+    """Drive ``train_loop(start_step) -> final_step`` with restart-on-
+    failure semantics.  ``train_loop`` must checkpoint into ``store``;
+    on failure we restore the latest logged state and re-enter."""
+    restarts = 0
+    start = 0
+    while True:
+        try:
+            return train_loop(start)
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            latest = store.latest_step()
+            if latest is None:
+                start = 0
+            else:
+                start = latest

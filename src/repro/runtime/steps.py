@@ -1,0 +1,105 @@
+"""Step builders: train_step / prefill_step / decode_step.
+
+These are the functions the launcher jits with in/out shardings — the
+objects the multi-pod dry-run lowers and the roofline reads.  They are
+pure: (state, batch) → (state, metrics).
+
+Microbatching: gradient accumulation via ``lax.scan`` over microbatch
+slices — the scan body contains both the microbatch's backward matmuls
+and the accumulation add, which is what lets XLA's latency-hiding
+scheduler overlap the DP reduce of microbatch k with compute of k+1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShardingConfig, TrainConfig
+from repro.models import api
+from repro.optim import adamw_update, lr_schedule
+from repro.optim.adamw import AdamWState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    scfg: ShardingConfig) -> Callable:
+    """(TrainState, batch) → (TrainState, metrics)."""
+
+    def loss_of(params, mb):
+        return api.loss_fn(params, mb, cfg, remat=scfg.remat,
+                           impl=scfg.attn_impl)
+
+    def train_step(state: TrainState, batch):
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+
+            def slice_mb(x, i):
+                b = x.shape[0] // n
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+            def body(acc, i):
+                mb = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                l, g = jax.value_and_grad(loss_of)(state.params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zero_g),
+                jnp.arange(n, dtype=jnp.int32))
+            loss = loss / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+
+        lr = lr_schedule(state.step + 1, tcfg)  # 1-indexed: warmup
+        # fraction 1/W on the first step, never exactly zero
+        params, opt, stats = adamw_update(grads, state.opt, state.params,
+                                          tcfg, lr)
+        new_state = TrainState(params=params, opt=opt,
+                               step=state.step + 1)
+        metrics = {"loss": loss, **stats}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_cap: int | None = None,
+                      impl: str = "xla"):
+    def prefill_step(params, batch):
+        logits, caches = api.prefill(params, batch, cfg,
+                                     cache_cap=cache_cap, impl=impl)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, caches, token, pos):
+        logits, caches = api.decode_step(params, token, pos, caches, cfg)
+        return logits, caches
+
+    return decode_step
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig,
+                     dtype=None) -> TrainState:
+    from repro.optim.adamw import adamw_init
+    dtype = dtype or (jnp.bfloat16 if tcfg.param_dtype == "bfloat16"
+                      else jnp.float32)
+    params = api.init_params(key, cfg, dtype)
+    return TrainState(params=params, opt=adamw_init(params, tcfg),
+                      step=jnp.int32(0))

@@ -1,0 +1,36 @@
+import os
+import sys
+
+# Tests must see ONE device (the dry-run sets 512 only inside its own
+# process). Make sure no flag leaks in from the environment.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np
+import pytest
+
+from repro.core.generate import EvolutionParams, build_store, generate_ops
+from repro.core.store import TemporalGraphStore
+
+
+@pytest.fixture(scope="session")
+def small_history():
+    """A small evolving graph + its brute-force oracle."""
+    from reference import BruteForce
+    params = EvolutionParams(m_attach=3, lam_extra=1.0, lam_remove=1.5,
+                             p_remove_node=0.03, events_per_unit=6)
+    ops = generate_ops(80, params, seed=11)
+    n_cap = 96
+    store = TemporalGraphStore(n_cap=n_cap)
+    t_max = max(o.t for o in ops)
+    store.ingest(ops)
+    store.advance_to(t_max)
+    # oracle replays the *accepted* log (store may auto-insert remEdge
+    # before remNode; replay from the store's own arrays)
+    from repro.core.store import Op
+    acc = [Op(int(o), int(u), int(v), int(t)) for o, u, v, t in
+           zip(store._op, store._u, store._v, store._t)]
+    bf = BruteForce(acc, n_cap, t_max)
+    return store, bf

@@ -1,0 +1,59 @@
+"""Brute-force numpy reference for the temporal graph store: replays
+the op log into per-time-unit adjacency sets.  The oracle every plan is
+checked against."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.delta import ADD_EDGE, ADD_NODE, REM_EDGE, REM_NODE
+
+
+class BruteForce:
+    def __init__(self, ops, n_cap: int, t_max: int):
+        """ops: list of core.store.Op (time-ordered)."""
+        self.n_cap = n_cap
+        self.t_max = t_max
+        self.snapshots = {}
+        nodes = set()
+        edges = set()
+        by_t = {}
+        for o in ops:
+            by_t.setdefault(o.t, []).append(o)
+        for t in range(0, t_max + 1):
+            for o in by_t.get(t, []):
+                if o.op == ADD_NODE:
+                    nodes.add(o.u)
+                elif o.op == REM_NODE:
+                    nodes.discard(o.u)
+                    edges = {e for e in edges if o.u not in e}
+                elif o.op == ADD_EDGE:
+                    edges.add((min(o.u, o.v), max(o.u, o.v)))
+                elif o.op == REM_EDGE:
+                    edges.discard((min(o.u, o.v), max(o.u, o.v)))
+            self.snapshots[t] = (frozenset(nodes), frozenset(edges))
+
+    def adj(self, t: int) -> np.ndarray:
+        _, edges = self.snapshots[t]
+        a = np.zeros((self.n_cap, self.n_cap), bool)
+        for (u, v) in edges:
+            a[u, v] = a[v, u] = True
+        return a
+
+    def node_mask(self, t: int) -> np.ndarray:
+        nodes, _ = self.snapshots[t]
+        m = np.zeros((self.n_cap,), bool)
+        for n in nodes:
+            m[n] = True
+        return m
+
+    def degree(self, v: int, t: int) -> int:
+        return int(self.adj(t)[v].sum())
+
+    def num_edges(self, t: int) -> int:
+        return len(self.snapshots[t][1])
+
+    def num_nodes(self, t: int) -> int:
+        return len(self.snapshots[t][0])
+
+    def degree_series(self, v: int, t_k: int, t_l: int) -> list[int]:
+        return [self.degree(v, t) for t in range(t_k, t_l + 1)]

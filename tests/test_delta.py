@@ -1,0 +1,124 @@
+"""Delta invariants: Definitions 2–5, Lemma 1, Theorem 1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE, Delta,
+                        delta_from_numpy, empty_delta,
+                        minimal_delta_between, reconstruct_dense,
+                        reconstruct_sequential, slice_delta)
+from repro.core.graph import DenseGraph, dense_from_numpy
+
+
+def test_invert_is_involution(small_history):
+    store, _ = small_history
+    d = store.delta()
+    dd = d.invert().invert()
+    assert bool(jnp.all(dd.op == d.op))
+
+
+def test_invert_swaps_add_rem():
+    d = delta_from_numpy([ADD_NODE, REM_NODE, ADD_EDGE, REM_EDGE],
+                         [0, 1, 2, 3], [0, 1, 3, 4], [0, 1, 0, 1],
+                         [1, 2, 3, 4])
+    inv = d.invert()
+    assert inv.op.tolist()[:4] == [REM_NODE, ADD_NODE, REM_EDGE, ADD_EDGE]
+
+
+def test_window_mask_half_open():
+    d = delta_from_numpy([ADD_NODE] * 4, [0, 1, 2, 3], [0, 1, 2, 3],
+                         [0, 1, 2, 3], [1, 2, 3, 4])
+    m = np.asarray(d.window_mask(1, 3))
+    assert m.tolist()[:4] == [False, True, True, False]
+
+
+def test_padding_is_inert(small_history):
+    store, bf = small_history
+    d_tight = store.delta()
+    d_padded = store.delta(capacity=d_tight.capacity * 2)
+    t = store.t_cur // 2
+    a = reconstruct_dense(store.current, d_tight, store.t_cur, t)
+    b = reconstruct_dense(store.current, d_padded, store.t_cur, t)
+    assert bool(jnp.all(a.adj == b.adj) & jnp.all(a.nodes == b.nodes))
+
+
+def test_completeness_every_time_unit(small_history):
+    """Definition 4: Δ[t0,t'] ∘ SG_t0 = SG_t' for every t'."""
+    store, bf = small_history
+    d = store.delta()
+    empty = DenseGraph(nodes=jnp.zeros((store.n_cap,), bool),
+                       adj=jnp.zeros((store.n_cap, store.n_cap), bool))
+    for t in range(0, store.t_cur + 1, max(store.t_cur // 7, 1)):
+        g = reconstruct_dense(empty, d, 0, t)
+        assert np.array_equal(np.asarray(g.adj), bf.adj(t)), t
+        assert np.array_equal(np.asarray(g.nodes), bf.node_mask(t)), t
+
+
+def test_backward_reconstruction_theorem1(small_history):
+    """Theorem 1: current snapshot + invertible delta suffice."""
+    store, bf = small_history
+    d = store.delta()
+    for t in range(0, store.t_cur + 1, max(store.t_cur // 7, 1)):
+        g = reconstruct_dense(store.current, d, store.t_cur, t)
+        assert np.array_equal(np.asarray(g.adj), bf.adj(t)), t
+        assert np.array_equal(np.asarray(g.nodes), bf.node_mask(t)), t
+
+
+def test_forward_from_any_anchor(small_history):
+    store, bf = small_history
+    d = store.delta()
+    t_a = store.t_cur // 3
+    anchor = reconstruct_dense(store.current, d, store.t_cur, t_a)
+    for t in [t_a + 1, store.t_cur // 2, store.t_cur]:
+        if t < t_a:
+            continue
+        g = reconstruct_dense(anchor, d, t_a, t)
+        assert np.array_equal(np.asarray(g.adj), bf.adj(t)), t
+
+
+def test_minimal_delta_lemma1(small_history):
+    """Lemma 1: the minimal delta between two snapshots, applied to the
+    first, yields the second — and contains no redundant ops."""
+    store, bf = small_history
+    t_a, t_b = store.t_cur // 4, 3 * store.t_cur // 4
+    ma, aa = bf.node_mask(t_a), bf.adj(t_a)
+    mb, ab = bf.node_mask(t_b), bf.adj(t_b)
+    op, u, v, t = minimal_delta_between(ma, aa, mb, ab, t_b)
+    # apply by hand
+    nodes = ma.copy()
+    adj = aa.copy()
+    for o, uu, vv in zip(op, u, v):
+        if o == ADD_NODE:
+            assert not nodes[uu]  # minimality: genuine transition
+            nodes[uu] = True
+        elif o == REM_NODE:
+            assert nodes[uu]
+            nodes[uu] = False
+            adj[uu, :] = adj[:, uu] = False
+        elif o == ADD_EDGE:
+            assert not adj[uu, vv]
+            adj[uu, vv] = adj[vv, uu] = True
+        else:
+            assert adj[uu, vv]
+            adj[uu, vv] = adj[vv, uu] = False
+    assert np.array_equal(nodes, mb)
+    assert np.array_equal(adj, ab)
+
+
+def test_slice_delta(small_history):
+    store, _ = small_history
+    d = store.delta()
+    lo, hi = store.t_cur // 4, store.t_cur // 2
+    s = slice_delta(d, lo, hi)
+    t = np.asarray(s.t)[: int(s.n_ops)]
+    assert ((t > lo) & (t <= hi)).all()
+
+
+def test_sequential_matches_vectorized(small_history):
+    store, _ = small_history
+    d = store.delta()
+    for t in range(0, store.t_cur + 1, max(store.t_cur // 5, 1)):
+        a = reconstruct_dense(store.current, d, store.t_cur, t)
+        b = reconstruct_sequential(store.current, d, store.t_cur, t)
+        assert bool(jnp.all(a.adj == b.adj)), t
+        assert bool(jnp.all(a.nodes == b.nodes)), t

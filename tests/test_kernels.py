@@ -1,0 +1,160 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(kernels run in interpret mode on CPU; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.generate import EvolutionParams, build_store
+from repro.core.reconstruct import reconstruct_dense
+
+
+@pytest.fixture(scope="module")
+def kstore():
+    return build_store(
+        90, EvolutionParams(m_attach=3, lam_extra=1.0, lam_remove=1.5,
+                            p_remove_node=0.02), seed=5, n_cap=128)
+
+
+class TestDeltaApply:
+    @pytest.mark.parametrize("tile", [32, 64, 128])
+    def test_backward_sweep(self, kstore, tile):
+        from repro.kernels.delta_apply import delta_apply, delta_apply_ref
+        d = kstore.delta()
+        for tq in [0, kstore.t_cur // 2, kstore.t_cur]:
+            g, ovf = delta_apply(kstore.current, d, kstore.t_cur, tq,
+                                 tile=tile, cap=2048)
+            ref = delta_apply_ref(kstore.current, d, kstore.t_cur, tq)
+            assert not bool(ovf)
+            assert bool(jnp.all(g.adj == ref.adj)), (tile, tq)
+            assert bool(jnp.all(g.nodes == ref.nodes)), (tile, tq)
+
+    def test_forward(self, kstore):
+        from repro.kernels.delta_apply import delta_apply, delta_apply_ref
+        d = kstore.delta()
+        t_a = 5
+        anchor = delta_apply_ref(kstore.current, d, kstore.t_cur, t_a)
+        g, ovf = delta_apply(anchor, d, t_a, kstore.t_cur, tile=64,
+                             cap=2048)
+        assert not bool(ovf)
+        assert bool(jnp.all(g.adj == kstore.current.adj))
+
+    def test_matches_core(self, kstore):
+        from repro.kernels.delta_apply import delta_apply
+        d = kstore.delta()
+        tq = kstore.t_cur // 3
+        g, _ = delta_apply(kstore.current, d, kstore.t_cur, tq, tile=64,
+                           cap=2048)
+        rr = reconstruct_dense(kstore.current, d, kstore.t_cur, tq)
+        assert bool(jnp.all(g.adj == rr.adj))
+
+    def test_overflow_flag(self, kstore):
+        from repro.kernels.delta_apply import delta_apply
+        d = kstore.delta()
+        _, ovf = delta_apply(kstore.current, d, kstore.t_cur, 0, tile=128,
+                             cap=8)
+        assert bool(ovf)
+
+
+class TestDegreeSeries:
+    @pytest.mark.parametrize("tile,buckets", [(32, 8), (64, 16), (128, 5)])
+    def test_sweep(self, kstore, tile, buckets):
+        from repro.kernels.degree_series import (degree_series_kernel,
+                                                 degree_series_ref)
+        d = kstore.delta()
+        tk = kstore.t_cur // 3
+        out, ovf = degree_series_kernel(kstore.current, d, tk, buckets,
+                                        tile=tile, cap=4096)
+        assert not bool(ovf)
+        ref = degree_series_ref(kstore.current, d, tk, kstore.t_cur,
+                                buckets)
+        assert bool(jnp.all(out == ref)), (tile, buckets)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "b,hq,hkv,sq,skv,d,causal,window,bq,bk",
+        [(2, 4, 2, 64, 64, 32, True, None, 32, 32),
+         (1, 4, 1, 64, 64, 16, True, 24, 16, 16),
+         (1, 2, 2, 40, 72, 32, False, None, 16, 32),
+         (1, 1, 1, 100, 100, 8, True, 16, 32, 32)])
+    def test_sweep(self, dtype, b, hq, hkv, sq, skv, d, causal, window,
+                   bq, bk):
+        from repro.kernels.flash_attention import (attention_ref,
+                                                   flash_attention)
+        rng = np.random.default_rng(42)
+        q = jnp.asarray(rng.standard_normal((b, hq, sq, d)),
+                        dtype=dtype)
+        k = jnp.asarray(rng.standard_normal((b, hkv, skv, d)),
+                        dtype=dtype)
+        v = jnp.asarray(rng.standard_normal((b, hkv, skv, d)),
+                        dtype=dtype)
+        out = flash_attention(q, k, v, causal, window, None, bq, bk, True)
+        ref = attention_ref(q, k, v, causal=causal, window=window,
+                            scale=d ** -0.5)
+        tol = 3e-5 if dtype == jnp.float32 else 3e-2
+        err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        assert err < tol
+
+    def test_grad_matches_reference(self):
+        from repro.kernels.flash_attention import (attention_ref,
+                                                   flash_attention)
+        rng = np.random.default_rng(1)
+        q, k, v = (jnp.asarray(rng.standard_normal((1, 2, 32, 16)),
+                               dtype=jnp.float32) for _ in range(3))
+
+        def l_kernel(q, k, v):
+            return jnp.sum(
+                flash_attention(q, k, v, True, None, None, 16, 16,
+                                True) ** 2)
+
+        def l_ref(q, k, v):
+            return jnp.sum(attention_ref(q, k, v, causal=True,
+                                         scale=16 ** -0.5) ** 2)
+
+        g1 = jax.grad(l_kernel, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(l_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize(
+        "b,s,h,p,n,chunk",
+        [(2, 64, 3, 8, 16, 16), (1, 100, 2, 16, 8, 32),
+         (2, 128, 4, 32, 64, 128), (1, 48, 1, 64, 128, 16)])
+    def test_sweep(self, b, s, h, p, n, chunk):
+        from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((b, s, h, p)),
+                        dtype=jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.2, (b, s, h)),
+                         dtype=jnp.float32)
+        a = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), dtype=jnp.float32)
+        B = jnp.asarray(rng.standard_normal((b, s, n)),
+                        dtype=jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, s, n)),
+                        dtype=jnp.float32)
+        y = ssd_scan(x, dt, a, B, C, chunk=chunk)
+        ref = ssd_ref(x, dt, a, B, C)
+        assert float(jnp.max(jnp.abs(y - ref))) < 5e-5
+
+    def test_matches_model_ssd(self):
+        """Kernel == the model stack's chunked-XLA SSD."""
+        from repro.kernels.ssd_scan import ssd_scan
+        from repro.models.ssm import ssd_chunked
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.standard_normal((2, 64, 3, 8)),
+                        dtype=jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.2, (2, 64, 3)),
+                         dtype=jnp.float32)
+        a = jnp.asarray(-rng.uniform(0.5, 2.0, (3,)), dtype=jnp.float32)
+        B = jnp.asarray(rng.standard_normal((2, 64, 16)),
+                        dtype=jnp.float32)
+        C = jnp.asarray(rng.standard_normal((2, 64, 16)),
+                        dtype=jnp.float32)
+        y1 = ssd_scan(x, dt, a, B, C, chunk=16)
+        y2, _ = ssd_chunked(x, dt, a, B, C, 16)
+        assert float(jnp.max(jnp.abs(y1 - y2))) < 5e-5

@@ -1,0 +1,109 @@
+"""Optimizer: AdamW vs a numpy reference; state dtypes; compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.optim import adamw_init, adamw_update, lr_schedule
+from repro.optim.adamw import QTensor
+from repro.optim.compress import compress_with_feedback, int8_decompress
+
+
+def _np_adamw(params, grads, m, v, step, cfg, lr):
+    gnorm = np.sqrt(sum((g ** 2).sum() for g in grads))
+    clip = min(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    out_p, out_m, out_v = [], [], []
+    bc1 = 1 - cfg.b1 ** step
+    bc2 = 1 - cfg.b2 ** step
+    for p, g, mm, vv in zip(params, grads, m, v):
+        g = g * clip
+        mm = cfg.b1 * mm + (1 - cfg.b1) * g
+        vv = cfg.b2 * vv + (1 - cfg.b2) * g * g
+        upd = (mm / bc1) / (np.sqrt(vv / bc2) + cfg.eps)
+        p = p - lr * (upd + cfg.weight_decay * p)
+        out_p.append(p)
+        out_m.append(mm)
+        out_v.append(vv)
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_numpy():
+    rng = np.random.default_rng(0)
+    cfg = TrainConfig(lr=1e-2, weight_decay=0.01)
+    params = {"a": jnp.asarray(rng.standard_normal((4, 5)),
+                               dtype=jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((3,)),
+                               dtype=jnp.float32)}
+    state = adamw_init(params, cfg)
+    np_p = [np.asarray(params["a"]), np.asarray(params["b"])]
+    np_m = [np.zeros_like(x) for x in np_p]
+    np_v = [np.zeros_like(x) for x in np_p]
+    for step in range(1, 5):
+        grads = {"a": jnp.asarray(rng.standard_normal((4, 5)),
+                                  dtype=jnp.float32),
+                 "b": jnp.asarray(rng.standard_normal((3,)),
+                                  dtype=jnp.float32)}
+        params, state, _ = adamw_update(grads, state, params, cfg,
+                                        jnp.float32(1e-2))
+        np_p, np_m, np_v = _np_adamw(
+            np_p, [np.asarray(grads["a"]), np.asarray(grads["b"])],
+            np_m, np_v, step, cfg, 1e-2)
+        assert np.allclose(np.asarray(params["a"]), np_p[0], atol=1e-5)
+        assert np.allclose(np.asarray(params["b"]), np_p[1], atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_state_dtypes_reduce_loss(dtype):
+    """A toy regression must converge under every opt-state dtype."""
+    rng = np.random.default_rng(1)
+    w_true = rng.standard_normal((8, 1)).astype(np.float32)
+    X = rng.standard_normal((64, 8)).astype(np.float32)
+    y = X @ w_true
+    cfg = TrainConfig(lr=5e-2, weight_decay=0.0, opt_state_dtype=dtype,
+                      grad_clip=10.0)
+    params = {"w": jnp.zeros((8, 1), jnp.float32)}
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.mean((jnp.asarray(X) @ p["w"] - jnp.asarray(y)) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, cfg,
+                                        jnp.float32(5e-2))
+    l1 = float(loss(params))
+    assert l1 < 0.2 * l0, (dtype, l0, l1)
+
+
+def test_qtensor_roundtrip_bounded():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 16)), dtype=jnp.float32)
+    q = QTensor.quantize(x)
+    err = float(jnp.max(jnp.abs(q.dequantize() - x)))
+    assert err <= float(q.scale) * 0.5 + 1e-7
+
+
+def test_schedule_warmup_and_decay():
+    cfg = TrainConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(jnp.int32(0), cfg)) == 0.0
+    assert abs(float(lr_schedule(jnp.int32(10), cfg)) - 1e-3) < 1e-9
+    assert float(lr_schedule(jnp.int32(100), cfg)) < 1e-6
+
+
+def test_error_feedback_unbiased():
+    """Accumulated compressed grads converge to accumulated true grads
+    (error feedback keeps the long-run bias at one quantization step)."""
+    rng = np.random.default_rng(3)
+    err = jnp.zeros((64,), jnp.float32)
+    total_true = np.zeros((64,), np.float32)
+    total_sent = np.zeros((64,), np.float32)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal((64,)), dtype=jnp.float32)
+        q, scale, err = compress_with_feedback(g, err)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(int8_decompress(q, scale))
+    resid = np.abs(total_true - total_sent).max()
+    # residual = |current error carry| ≤ one quantization bucket
+    assert resid <= float(jnp.max(jnp.abs(err))) + 1e-5

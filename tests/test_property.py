@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on the system's invariants.
+
+Strategy: random legal op histories → the store must satisfy
+completeness, plan equivalence, partial-reconstruction equivalence and
+edge-layout equivalence for arbitrary query times/nodes.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (reconstruct_dense, reconstruct_edge,
+                        reconstruct_sequential)
+from repro.core.delta import ADD_EDGE, ADD_NODE, REM_EDGE, REM_NODE
+from repro.core.plans import Query
+from repro.core.store import Op, TemporalGraphStore
+
+N = 12  # node universe — small keeps hypothesis fast on 1 CPU
+
+
+@st.composite
+def histories(draw):
+    """A legal random history: ops are proposals; the store rejects
+    illegal transitions, so any sequence is admissible input."""
+    n_ops = draw(st.integers(min_value=4, max_value=60))
+    ops = []
+    t = 1
+    for _ in range(n_ops):
+        t += draw(st.integers(min_value=0, max_value=2))
+        kind = draw(st.sampled_from([ADD_NODE, ADD_NODE, ADD_EDGE,
+                                     ADD_EDGE, ADD_EDGE, REM_EDGE,
+                                     REM_NODE]))
+        u = draw(st.integers(min_value=0, max_value=N - 1))
+        v = draw(st.integers(min_value=0, max_value=N - 1))
+        ops.append(Op(kind, u, v if kind in (ADD_EDGE, REM_EDGE) else u,
+                      t))
+    return ops
+
+
+def _build(ops):
+    store = TemporalGraphStore(n_cap=N)
+    t_max = max(o.t for o in ops)
+    store.ingest(ops)
+    store.advance_to(t_max)
+    return store
+
+
+@given(histories(), st.integers(min_value=0, max_value=100))
+@settings(max_examples=25, deadline=None)
+def test_sequential_equals_vectorized_equals_edges(ops, t_raw):
+    store = _build(ops)
+    t = t_raw % (store.t_cur + 1)
+    d = store.delta()
+    a = reconstruct_dense(store.current, d, store.t_cur, t)
+    b = reconstruct_sequential(store.current, d, store.t_cur, t)
+    assert bool(jnp.all(a.adj == b.adj) & jnp.all(a.nodes == b.nodes))
+    eg = store.edge_graph()
+    e = reconstruct_edge(eg, d, store.t_cur, t)
+    assert bool(jnp.all(e.to_dense().adj == a.adj))
+    assert bool(jnp.all(e.nodes == a.nodes))
+
+
+@given(histories(), st.integers(min_value=0, max_value=N - 1),
+       st.integers(min_value=0, max_value=100),
+       st.integers(min_value=0, max_value=100))
+@settings(max_examples=25, deadline=None)
+def test_plans_agree(ops, v, ta_raw, tb_raw):
+    store = _build(ops)
+    t_k = min(ta_raw, tb_raw) % (store.t_cur + 1)
+    t_l = max(t_k, max(ta_raw, tb_raw) % (store.t_cur + 1))
+    q_point = Query("point", "node", "degree", t_k=t_k, v=v)
+    r_two = int(store.query(q_point, plan="two_phase"))
+    assert int(store.query(q_point, plan="hybrid")) == r_two
+    assert int(store.query(q_point, plan="hybrid", indexed=True)) == r_two
+    assert int(store.query(q_point, plan="two_phase",
+                           partial_rows=True)) == r_two
+
+    q_diff = Query("diff", "node", "degree", t_k=t_k, t_l=t_l, v=v)
+    d_two = int(store.query(q_diff, plan="two_phase"))
+    assert int(store.query(q_diff, plan="delta_only")) == d_two
+    assert int(store.query(q_diff, plan="delta_only", indexed=True)) == \
+        d_two
+
+
+@given(histories())
+@settings(max_examples=15, deadline=None)
+def test_roundtrip_back_then_forward(ops):
+    """BackRec then ForRec returns the current snapshot (invertibility,
+    Definition 5)."""
+    store = _build(ops)
+    d = store.delta()
+    t = store.t_cur // 2
+    back = reconstruct_dense(store.current, d, store.t_cur, t)
+    forth = reconstruct_dense(back, d, t, store.t_cur)
+    assert bool(jnp.all(forth.adj == store.current.adj))
+    assert bool(jnp.all(forth.nodes == store.current.nodes))
+
+
+@given(histories())
+@settings(max_examples=10, deadline=None)
+def test_store_consistency(ops):
+    """Current snapshot is structurally valid (symmetric adjacency,
+    edges only between live nodes)."""
+    store = _build(ops)
+    assert bool(store.current.validate())

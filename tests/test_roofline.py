@@ -1,0 +1,102 @@
+"""HLO analysis: shape parsing, collective accounting, scan-aware
+while-body scaling on a synthetic HLO module."""
+import pytest
+
+from repro.launch.roofline import (collective_bytes, model_flops,
+                                   roofline_terms, scan_aware_metrics,
+                                   shape_bytes)
+
+HLO = """\
+HloModule jit_step, entry_computation_layout={()->f32[8,8]{1,0}}
+
+%wcond (arg.1: (s32[], f32[8,8])) -> pred[] {
+  %arg.1 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte.1 = s32[] get-tuple-element(%arg.1), index=0
+  %c8 = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%gte.1, %c8), direction=LT
+}
+
+%wbody (arg.2: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg.2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%arg.2), index=0
+  %gte.3 = f32[8,8]{1,0} get-tuple-element(%arg.2), index=1
+  %dot.1 = f32[8,8]{1,0} dot(%gte.3, %gte.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.1 = f32[8,8]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %add.1 = s32[] add(%gte.2, %one)
+  ROOT %tup.1 = (s32[], f32[8,8]{1,0}) tuple(%add.1, %ar.1)
+}
+
+%sum (a.1: f32[], b.1: f32[]) -> f32[] {
+  %a.1 = f32[] parameter(0)
+  %b.1 = f32[] parameter(1)
+  ROOT %s.1 = f32[] add(%a.1, %b.1)
+}
+
+ENTRY %main (p0.1: f32[8,8]) -> f32[8,8] {
+  %p0.1 = f32[8,8]{1,0} parameter(0)
+  %zero.1 = s32[] constant(0)
+  %tup.2 = (s32[], f32[8,8]{1,0}) tuple(%zero.1, %p0.1)
+  %while.1 = (s32[], f32[8,8]{1,0}) while(%tup.2), condition=%wcond, body=%wbody
+  %ag.1 = f32[16,8]{1,0} all-gather(%p0.1), dimensions={0}
+  %sl.1 = f32[8,8]{1,0} slice(%ag.1), slice={[0:8], [0:8]}
+  ROOT %gte.4 = f32[8,8]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,8]{1,0}") == 256
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[4], s32[2])") == 24
+    assert shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_operands():
+    c = collective_bytes(HLO)
+    # all-reduce operand = dot result 256 B; appears once in the body
+    assert c["per_kind"]["all-reduce"] == 256
+    assert c["per_kind"]["all-gather"] == 256  # operand p0 = 256 B
+    assert c["counts"]["all-reduce"] == 1
+
+
+def test_scan_aware_trip_scaling():
+    sa = scan_aware_metrics(HLO, default_trips=1)
+    # dot: 2*8*8*8 = 1024 flops, body runs 5 times (wcond constant)
+    assert sa["flops"] == pytest.approx(5 * 1024)
+    # collectives: 5 × 256 (in-loop all-reduce) + 256 (entry all-gather)
+    assert sa["coll_bytes"] == pytest.approx(5 * 256 + 256)
+
+
+def test_known_trip_count_precedence():
+    hlo = HLO.replace(
+        "while(%tup.2), condition=%wcond, body=%wbody",
+        'while(%tup.2), condition=%wcond, body=%wbody, '
+        'backend_config={"known_trip_count":{"n":"7"}}')
+    sa = scan_aware_metrics(hlo, default_trips=1)
+    assert sa["flops"] == pytest.approx(7 * 1024)
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 100e9, 1e9)
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)
+    t2 = roofline_terms(1e12, 819e9 * 2, 0)
+    assert t2["dominant"] == "memory"
+
+
+def test_model_flops_monotonic():
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    cfg = get_config("smollm-360m")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    f_decode = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_train > f_decode
+    assert f_prefill > f_decode
+    # MoE active < total
+    moe = get_config("mixtral-8x7b")
+    f_moe = model_flops(moe, SHAPES["train_4k"])
+    dense_equiv = 6 * 47e9 * SHAPES["train_4k"].seq_len * \
+        SHAPES["train_4k"].global_batch
+    assert f_moe < dense_equiv  # top-2 of 8 experts ≪ all-8 dense

@@ -1,0 +1,38 @@
+"""Sharding rules: logical resolution, divisibility, param-path rules.
+(Mesh-dependent behavior is tested in-subprocess in test_distributed.)"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import (LOGICAL_RULES, logical_rules, param_spec_for,
+                            resolve, spec)
+
+
+def test_resolve_no_mesh_is_none():
+    # outside any mesh context every logical axis resolves to None
+    assert resolve("batch", 128) is None
+    assert spec("batch", None, "model", dims=(8, 4, 16)) == P(None, None,
+                                                              None)
+
+
+def test_param_rules_match_paths():
+    s = param_spec_for("groups/l0/attn/wq", (2, 960, 15, 64))
+    assert len(s) == 4  # stacked leading dim + 3 rule dims
+    s2 = param_spec_for("m/groups/l0/moe/w_up/q", (2, 8, 128, 256))
+    assert len(s2) == 4
+    s3 = param_spec_for("embed/tok", (512, 64))
+    assert len(s3) == 2
+    s4 = param_spec_for("unknown/leaf", (3, 3))
+    assert s4 == P(None, None)
+
+
+def test_logical_rules_override():
+    with logical_rules(fsdp=("pod", "data")):
+        assert LOGICAL_RULES["fsdp"] == ("pod", "data")
+    assert LOGICAL_RULES["fsdp"] == ("data",)
+
+
+def test_norm_params_replicated():
+    s = param_spec_for("groups/l0/norm1/scale", (2, 960))
+    assert s == P(None, None)
