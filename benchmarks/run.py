@@ -67,6 +67,19 @@ def main() -> None:
 
     section("reconstruction engines", rec)
 
+    # Batched multi-query engine throughput
+    from benchmarks import bench_engine_batch
+
+    def eb():
+        rows, _ = bench_engine_batch.run(
+            n_nodes=150 if args.fast else 300,
+            n_queries=64 if args.fast else 256,
+            reps=2 if args.fast else 3)
+        for name, val, note in rows:
+            print(f"{name},{val},{note}")
+
+    section("engine batched serving", eb)
+
     # Kernels
     from benchmarks import bench_kernels
 

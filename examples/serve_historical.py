@@ -4,7 +4,10 @@ queries against a sharded temporal graph store.
 Builds a Table-3-scale evolving social graph, row-shards the current
 snapshot over all available devices, then serves:
   1. a batch of point-degree queries via the distributed hybrid plan,
-  2. the full Table-2 plan matrix on mixed query types,
+  2. a mixed-plan query stream through the unified engine's *batched*
+     executor (core/engine.py: cost-based per-query plan choice, one
+     vmapped device program per (plan, anchor) group), compared
+     against the sequential single-query loop,
   3. a degree *time-series* for every node at once (the hybrid
      aggregate plan vectorized over the whole graph).
 
@@ -64,33 +67,34 @@ def main():
     q0 = Query("point", "node", "degree", t_k=int(ts[0]), v=int(vs[0]))
     assert int(store.query(q0, plan="two_phase")) == int(deg[0])
 
-    # 2 — mixed plan matrix
+    # 2 — mixed-plan stream through the unified engine (auto-planned,
+    # batched by (plan, anchor) group) vs the single-query loop
     tc = store.t_cur
     mixed = [
-        ("point/node/two_phase",
-         Query("point", "node", "degree", t_k=tc // 3, v=int(vs[1])),
-         dict(plan="two_phase", partial_rows=True)),
-        ("point/node/hybrid+index",
-         Query("point", "node", "degree", t_k=tc // 3, v=int(vs[1])),
-         dict(plan="hybrid", indexed=True)),
-        ("diff/node/delta_only",
-         Query("diff", "node", "degree", t_k=tc // 4, t_l=3 * tc // 4,
-               v=int(vs[2])), dict(plan="delta_only")),
-        ("agg/node/hybrid",
-         Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 10,
-               v=int(vs[3]), agg="mean"), dict(plan="hybrid")),
-        ("point/global/two_phase",
-         Query("point", "global", "num_edges", t_k=tc // 2), {}),
-        ("diff/global/two_phase",
-         Query("diff", "global", "avg_degree", t_k=tc // 4,
-               t_l=3 * tc // 4), {}),
+        Query("point", "node", "degree", t_k=tc // 3, v=int(vs[1])),
+        Query("diff", "node", "degree", t_k=tc // 4, t_l=3 * tc // 4,
+              v=int(vs[2])),
+        Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 10,
+              v=int(vs[3]), agg="mean"),
+        Query("point", "global", "num_edges", t_k=tc // 2),
+        Query("diff", "global", "avg_degree", t_k=tc // 4, t_l=3 * tc // 4),
     ]
-    for name, q, kw in mixed:
-        t0 = time.time()
-        r = store.query(q, **kw)
-        r = np.asarray(jax.device_get(r))
-        print(f"[query] {name:28s} -> {np.round(float(r), 3)} "
-              f"({(time.time()-t0)*1e3:.1f} ms)")
+    stream = [mixed[i % len(mixed)] for i in range(args.queries)]
+    engine = store.engine()
+    engine.evaluate_many(stream)  # warm-up / compile
+    t0 = time.time()
+    res, choices = engine.evaluate_many(stream, return_choices=True)
+    dt_batch = time.time() - t0
+    t0 = time.time()
+    seq = [engine.evaluate_many([q])[0] for q in stream]
+    dt_loop = time.time() - t0
+    for q, c, r in zip(stream[:len(mixed)], choices, res):
+        print(f"[query] {q.kind}/{q.scope}/{q.measure:12s} "
+              f"plan={c.plan:10s} -> {np.round(float(r), 3)}")
+    assert all(float(a) == float(b) for a, b in zip(res, seq))
+    print(f"[engine] {len(stream)} mixed queries: batched "
+          f"{dt_batch*1e3:.1f} ms vs loop {dt_loop*1e3:.1f} ms "
+          f"({dt_loop/max(dt_batch, 1e-9):.1f}x)")
 
     # 3 — all-node degree time series (one pass over the delta)
     t_k = 2 * tc // 3

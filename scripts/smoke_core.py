@@ -61,4 +61,16 @@ r_point = store.query(q_point, plan="two_phase")
 r_part = store.query(q_point, plan="two_phase", partial_rows=True)
 assert int(r_part) == int(r_point), (int(r_part), int(r_point))
 
+# batched engine parity on the same store
+qs = [q_point, q_diff, q_agg]
+batched = store.evaluate_many(qs)
+assert int(batched[0]) == int(r_point)
+assert int(batched[1]) == int(r_do)
+assert abs(float(batched[2]) - r_hyb) < 1e-5
+
 print("core smoke OK")
+
+# unified-engine end-to-end gate (ingest -> materialize -> batched
+# mixed-plan queries vs sequential replay)
+import smoke_engine  # noqa: E402  (same scripts/ directory)
+smoke_engine.main()

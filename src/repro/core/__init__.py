@@ -5,6 +5,8 @@
 from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
                               Delta, concat_deltas, delta_from_numpy,
                               empty_delta, minimal_delta_between, slice_delta)
+from repro.core.engine import (AnchorCandidate, AnchorSelector,
+                               HistoricalQueryEngine, PlanChoice, Planner)
 from repro.core.graph import DenseGraph, EdgeGraph, dense_from_numpy, \
     empty_dense, empty_edge
 from repro.core.index import (NodeIndex, build_node_index,
@@ -12,7 +14,7 @@ from repro.core.index import (NodeIndex, build_node_index,
                               gather_node_ops, gather_window, temporal_range)
 from repro.core.materialize import (MaterializationPolicy, MaterializedStore,
                                     edge_jaccard)
-from repro.core.partial import closure_mask, partial_reconstruct
+from repro.core.partial import closure_mask, partial_reconstruct, seed_mask
 from repro.core.plans import Query, applicable_plans, evaluate, two_phase
 from repro.core.reconstruct import (degree_series, node_degree_series,
                                     reconstruct_at, reconstruct_dense,

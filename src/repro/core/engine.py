@@ -1,0 +1,677 @@
+"""Unified historical-query engine: anchor planner + batched executor.
+
+This module centralizes the choice logic that used to be spread across
+``store.snapshot_at`` (inline anchor costing), ``plans.evaluate``
+(hard-coded auto plan rule) and ``partial.py`` (caller-built seed
+masks), mirroring how DeltaGraph centralizes snapshot-retrieval
+planning.  Components map to the paper as follows:
+
+* ``AnchorSelector`` — §2.2 (materialized snapshots + Theorem 1): the
+  anchor candidates are SG_tcur plus every materialized snapshot,
+  costed either by time distance or by #ops in the connecting delta
+  window (``count_window_ops``, O(log M) via the temporal index).
+
+* ``Planner`` — §3.2 (Table 2 plans) × §3.3 (partial reconstruction,
+  delta indexes): picks {two-phase, delta-only, hybrid} and the
+  {indexed, windowed, partial} variant per query from delta/index
+  statistics, producing an explicit ``PlanChoice``.
+
+* ``evaluate_many`` — the batched multi-query executor (beyond-paper;
+  the successor system "Storing and Analyzing Historical Graph Data at
+  Scale" batches multi-snapshot retrieval the same way): B queries are
+  grouped by (plan choice, anchor), their times/nodes padded into
+  device arrays, and each group runs as ONE ``vmap``'d reconstruction +
+  measurement program — one LWW scatter pass amortized over all the
+  queries sharing an anchor window — instead of B separate host-side
+  dispatches.
+
+The executor reuses the exact kernels from ``plans.py`` under ``vmap``,
+so batched results bit-match the single-query path (integer measures
+are exact; see tests/test_engine.py).  ``core/distributed.py`` will
+shard these groups next: the (anchor, plan) group is precisely the unit
+that is device-parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta import Delta
+from repro.core.graph import DenseGraph
+from repro.core.index import (NodeIndex, count_window_ops, gather_node_ops,
+                              gather_window)
+from repro.core.partial import partial_reconstruct, seed_mask
+from repro.core.plans import (Query, applicable_plans,
+                              delta_only_degree_diff, hybrid_point_degree,
+                              masked_aggregate)
+from repro.core.queries import GLOBAL_MEASURES, NODE_MEASURES
+from repro.core.reconstruct import degree_series, reconstruct_dense
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    return max(lo, 1 << int(np.ceil(np.log2(max(int(n), 1)))))
+
+
+def _window_ops_host(t_sorted: np.ndarray, t_lo, t_hi) -> int:
+    """#ops with t in (t_lo, t_hi] — ``count_window_ops`` on a host
+    copy of the (time-sorted) delta timestamps.  Keeps the planning
+    loop free of device round-trips: costing B queries is B numpy
+    binary searches, not 2B device syncs."""
+    i0 = np.searchsorted(t_sorted, t_lo, side="right")
+    i1 = np.searchsorted(t_sorted, t_hi, side="right")
+    return int(i1 - i0)
+
+
+# ---------------------------------------------------------------------------
+# Anchor selection (paper §2.2, Theorem 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AnchorCandidate:
+    """One reconstruction anchor: the current snapshot (id == -1) or a
+    materialized snapshot (id == index into the materialized store)."""
+
+    anchor_id: int
+    t: int
+    cost: int
+
+
+class AnchorSelector:
+    """Picks the cheapest anchor snapshot for reconstructing SG_t.
+
+    Candidates are SG_tcur (when given) plus every materialized
+    snapshot; the "current snapshot competes with the materialized
+    ones" rule that used to be inlined in ``store.snapshot_at`` lives
+    here now.  ``method='ops'`` prices a candidate by #ops in the
+    window between it and the query time (operation-based selection,
+    exact cost proxy, O(log M) each via the temporal index);
+    ``'time'`` by |t_candidate - t_query| (the paper's cheap variant,
+    wrong under bursty logs).
+    """
+
+    def __init__(self, times: Sequence[int], snapshots: Sequence[DenseGraph],
+                 *, t_cur: int | None = None,
+                 current: DenseGraph | None = None,
+                 t_host: np.ndarray | None = None):
+        assert len(times) == len(snapshots)
+        self.times = [int(t) for t in times]
+        self.snapshots = list(snapshots)
+        self.t_cur = t_cur
+        self.current = current
+        self.t_host = t_host  # host copy of delta.t for sync-free costing
+
+    def candidates(self, t_query: int, delta: Delta,
+                   method: Literal["time", "ops"] = "ops"
+                   ) -> list[AnchorCandidate]:
+        cands = []
+
+        def cost(t_a: int) -> int:
+            if method == "time":
+                return abs(int(t_a) - int(t_query))
+            if self.t_host is not None:
+                return _window_ops_host(self.t_host, min(t_a, t_query),
+                                        max(t_a, t_query))
+            return int(count_window_ops(delta, min(t_a, t_query),
+                                        max(t_a, t_query)))
+
+        if self.current is not None and self.t_cur is not None:
+            cands.append(AnchorCandidate(-1, int(self.t_cur),
+                                         cost(self.t_cur)))
+        for i, t_a in enumerate(self.times):
+            cands.append(AnchorCandidate(i, t_a, cost(t_a)))
+        if not cands:
+            raise ValueError("no anchor candidates (no current snapshot "
+                             "and no materialized snapshots)")
+        return cands
+
+    def select(self, t_query: int, delta: Delta,
+               method: Literal["time", "ops"] = "ops") -> AnchorCandidate:
+        cands = self.candidates(t_query, delta, method)
+        # Stable tie-break: earliest candidate wins (current first), so
+        # selection is deterministic and batch grouping reproducible.
+        return min(cands, key=lambda c: c.cost)
+
+    def get(self, anchor_id: int) -> tuple[int, DenseGraph]:
+        if anchor_id == -1:
+            if self.current is None:
+                raise ValueError("no current snapshot registered")
+            return int(self.t_cur), self.current
+        return self.times[anchor_id], self.snapshots[anchor_id]
+
+
+# ---------------------------------------------------------------------------
+# Plan choice (paper §3.2 Table 2 × §3.3 variants)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """A fully resolved execution recipe for one query."""
+
+    plan: str                 # two_phase | delta_only | hybrid
+    anchor_id: int = -1       # -1 = current snapshot
+    t_anchor: int = 0
+    indexed: bool = False     # node-centric index (§3.3.2)
+    windowed: bool = False    # temporal-index window slice (§3.3.2)
+    partial: bool = False     # partial reconstruction (§3.3.1)
+    cost: int = 0             # planner's op-count estimate
+
+
+class Planner:
+    """Cost-based plan selection from delta / index statistics.
+
+    Costs are op counts (the paper's unit): a plan pays for the delta
+    window it must traverse, plus a layout surcharge for dense
+    reconstruction (the N² LWW scatter) that the measure-only plans
+    avoid.  Degree queries admit all of Table 2; other measures fall
+    back to two-phase, as in the paper.
+    """
+
+    def __init__(self, selector: AnchorSelector, *, n_cap: int,
+                 index: NodeIndex | None = None, node_cap: int = 1024,
+                 selection: Literal["time", "ops"] = "ops"):
+        self.selector = selector
+        self.n_cap = int(n_cap)
+        self.index = index
+        self.node_cap = int(node_cap)
+        self.selection = selection
+        self._row_ptr_host: np.ndarray | None = None
+
+    def _window_ops(self, delta: Delta, t_lo, t_hi) -> int:
+        if self.selector.t_host is not None:
+            return _window_ops_host(self.selector.t_host, t_lo, t_hi)
+        return int(count_window_ops(delta, t_lo, t_hi))
+
+    def _node_ops(self, v: int) -> int | None:
+        """#ops touching node v, if the node-centric index is present."""
+        if self.index is None or v is None:
+            return None
+        if self._row_ptr_host is None:
+            self._row_ptr_host = np.asarray(self.index.row_ptr)
+        ptr = self._row_ptr_host
+        return int(ptr[v + 1] - ptr[v])
+
+    def choose(self, q: Query, delta: Delta, t_cur: int) -> PlanChoice:
+        plans = applicable_plans(q)
+        anchor = self.selector.select(q.t_k, delta, self.selection)
+        # two-phase traverses the anchor→query window and pays the dense
+        # scatter; partial reconstruction (node scope) reduces the
+        # scatter to the closure rows.
+        scatter = self.n_cap if q.scope == "node" else self.n_cap ** 2 // 64
+        cost_two = anchor.cost + scatter
+        # Partial reconstruction is only auto-enabled where its closure
+        # provably covers the query: single-window reconstructions of a
+        # degree measure.  diff composes a second reconstruction from
+        # the first's (already truncated) partial snapshot — stale rows
+        # outside the first closure would leak — and non-degree
+        # measures keep the scalar auto path's dense behavior.
+        use_partial = (q.scope == "node" and q.measure == "degree"
+                       and q.kind != "diff")
+
+        best_plan, best_cost = "two_phase", cost_two
+        if q.measure == "degree" and q.scope == "node":
+            n_ops = self._node_ops(q.v)
+            if "hybrid" in plans:
+                # one corrective pass over (t_k, t_cur]
+                c = self._window_ops(delta, q.t_k, t_cur)
+                if n_ops is not None:
+                    c = min(c, n_ops)
+                if c < best_cost:
+                    best_plan, best_cost = "hybrid", c
+            if "delta_only" in plans:
+                c = self._window_ops(delta, q.t_k, q.t_l)
+                if n_ops is not None:
+                    c = min(c, n_ops)
+                if c < best_cost:
+                    best_plan, best_cost = "delta_only", c
+
+        indexed = (self.index is not None and q.scope == "node"
+                   and best_plan in ("delta_only", "hybrid")
+                   and (self._node_ops(q.v) or 0) <= self.node_cap)
+        # windowed pays off when the anchor window is much smaller than
+        # the full log (pow2 capacities bound recompiles).
+        windowed = (best_plan == "two_phase"
+                    and _pow2(anchor.cost, 64) * 2 <= delta.capacity)
+        return PlanChoice(plan=best_plan, anchor_id=anchor.anchor_id,
+                          t_anchor=anchor.t, indexed=indexed,
+                          windowed=windowed,
+                          partial=use_partial and best_plan == "two_phase",
+                          cost=best_cost)
+
+
+# ---------------------------------------------------------------------------
+# Batched kernels (vmap over the plans.py kernels)
+# ---------------------------------------------------------------------------
+
+
+def _measure_named(g: DenseGraph, measure: str, scope: str, v):
+    if scope == "node":
+        return NODE_MEASURES[measure](g, v)
+    return GLOBAL_MEASURES[measure](g)
+
+
+@partial(jax.jit, static_argnames=("measure", "scope", "use_partial",
+                                   "passes"))
+def batch_two_phase_point(anchor: DenseGraph, delta: Delta, t_anchor,
+                          ts, vs, *, measure: str, scope: str,
+                          use_partial: bool = False, passes: int = 2):
+    """B point queries against one anchor: one vmapped LWW pass."""
+
+    def one(t, v):
+        if use_partial and scope == "node":
+            g = partial_reconstruct(anchor, delta, t_anchor, t,
+                                    seed_mask(anchor.n_cap, v),
+                                    passes=passes)
+        else:
+            g = reconstruct_dense(anchor, delta, t_anchor, t)
+        return _measure_named(g, measure, scope, v)
+
+    return jax.vmap(one)(ts, vs)
+
+
+@partial(jax.jit, static_argnames=("measure", "scope", "use_partial",
+                                   "passes"))
+def batch_two_phase_diff(anchor: DenseGraph, delta: Delta, t_anchor,
+                         tks, tls, vs, *, measure: str, scope: str,
+                         use_partial: bool = False, passes: int = 2):
+    """B range-differential queries: reconstruct SG_tl from the anchor,
+    then SG_tk from SG_tl (reusing the nearer snapshot exactly as the
+    single-query plan does, so bitwise parity holds)."""
+
+    def one(tk, tl, v):
+        if use_partial and scope == "node":
+            g_l = partial_reconstruct(anchor, delta, t_anchor, tl,
+                                      seed_mask(anchor.n_cap, v),
+                                      passes=passes)
+        else:
+            g_l = reconstruct_dense(anchor, delta, t_anchor, tl)
+        g_k = reconstruct_dense(g_l, delta, tl, tk)
+        a = _measure_named(g_l, measure, scope, v)
+        b = _measure_named(g_k, measure, scope, v)
+        return jnp.abs(a - b)
+
+    return jax.vmap(one)(tks, tls, vs)
+
+
+@partial(jax.jit, static_argnames=("measure", "scope", "num_buckets",
+                                   "agg", "use_partial", "passes"))
+def batch_two_phase_agg(anchor: DenseGraph, delta: Delta, t_anchor,
+                        tks, tls, vs, *, measure: str, scope: str,
+                        num_buckets: int, agg: str,
+                        use_partial: bool = False, passes: int = 2):
+    """B range-aggregate queries, each over ≤ num_buckets time units:
+    a vmapped scan of reconstructions (buckets past t_l are masked)."""
+
+    def one(tk, tl, v):
+        ts = tk + jnp.arange(num_buckets, dtype=jnp.int32)
+
+        def m_at(t):
+            if use_partial and scope == "node":
+                g = partial_reconstruct(anchor, delta, t_anchor, t,
+                                        seed_mask(anchor.n_cap, v),
+                                        passes=passes)
+            else:
+                g = reconstruct_dense(anchor, delta, t_anchor, t)
+            return _measure_named(g, measure, scope, v)
+
+        vals = jax.lax.map(m_at, ts)
+        return masked_aggregate(vals, tl - tk + 1, num_buckets, agg)
+
+    return jax.vmap(one)(tks, tls, vs)
+
+
+@jax.jit
+def batch_hybrid_point(current: DenseGraph, delta: Delta, vs, tks, t_cur):
+    return jax.vmap(hybrid_point_degree,
+                    in_axes=(None, None, 0, 0, None))(current, delta, vs,
+                                                      tks, t_cur)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def batch_hybrid_point_indexed(current: DenseGraph, delta: Delta,
+                               index: NodeIndex, vs, tks, t_cur, cap: int):
+    def one(v, tk):
+        sub = gather_node_ops(delta, index, v, cap)
+        return hybrid_point_degree(current, sub, v, tk, t_cur)
+
+    return jax.vmap(one)(vs, tks)
+
+
+@jax.jit
+def batch_hybrid_diff(current: DenseGraph, delta: Delta, vs, tks, tls,
+                      t_cur):
+    def one(v, tk, tl):
+        d_l = hybrid_point_degree(current, delta, v, tl, t_cur)
+        d_k = hybrid_point_degree(current, delta, v, tk, t_cur)
+        return jnp.abs(d_l - d_k)
+
+    return jax.vmap(one)(vs, tks, tls)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def batch_hybrid_diff_indexed(current: DenseGraph, delta: Delta,
+                              index: NodeIndex, vs, tks, tls, t_cur,
+                              cap: int):
+    def one(v, tk, tl):
+        sub = gather_node_ops(delta, index, v, cap)
+        d_l = hybrid_point_degree(current, sub, v, tl, t_cur)
+        d_k = hybrid_point_degree(current, sub, v, tk, t_cur)
+        return jnp.abs(d_l - d_k)
+
+    return jax.vmap(one)(vs, tks, tls)
+
+
+@partial(jax.jit, static_argnames=("w_q", "agg"))
+def batch_hybrid_agg_per_node(current: DenseGraph, delta: Delta, vs, tks,
+                              tls, w_q: int, agg: str):
+    """Fallback for groups whose union window is too wide to
+    materialize as an all-nodes series: one O(w_q) per-node series per
+    query (B scatter passes, O(B·w_q) memory — no n_cap factor)."""
+    from repro.core.reconstruct import node_degree_series
+
+    def one(v, tk, tl):
+        series = node_degree_series(current.degree(v), delta, v, tk, w_q)
+        return masked_aggregate(series, tl - tk + 1, w_q, agg)
+
+    return jax.vmap(one)(vs, tks, tls)
+
+
+@partial(jax.jit, static_argnames=("w_total", "w_q", "agg"))
+def batch_hybrid_agg(current: DenseGraph, delta: Delta, vs, tks, tls, t0,
+                     t_cur, w_total: int, w_q: int, agg: str):
+    """B range-aggregate degree queries off ONE shared all-nodes degree
+    time-series: a single un-vmapped scatter pass over the delta
+    (``degree_series``) covering the union window [t0, t0 + w_total),
+    then per-query gathers + masked aggregation.  This is the "one
+    delta pass amortized over all queries sharing a window" form —
+    vmapping the per-node kernel instead costs B scatter passes.
+
+    Bitwise-identical to the scalar ``hybrid_agg_degree``: both compute
+    degree(v, τ) = deg_cur(v) − suffix-net(τ) in exact int32 and divide
+    the exact f32 sum by the width.
+    """
+    series = degree_series(current, delta, t0, t0 + w_total - 1, w_total,
+                           t_cur)                       # i32[w_total, N]
+
+    def one(v, tk, tl):
+        idx = (tk - t0) + jnp.arange(w_q, dtype=jnp.int32)
+        vals = series[jnp.clip(idx, 0, w_total - 1), v]
+        return masked_aggregate(vals, tl - tk + 1, w_q, agg)
+
+    return jax.vmap(one)(vs, tks, tls)
+
+
+@jax.jit
+def batch_delta_only_diff(delta: Delta, vs, tks, tls):
+    return jax.vmap(delta_only_degree_diff,
+                    in_axes=(None, 0, 0, 0))(delta, vs, tks, tls)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def batch_delta_only_diff_indexed(delta: Delta, index: NodeIndex, vs, tks,
+                                  tls, cap: int):
+    def one(v, tk, tl):
+        sub = gather_node_ops(delta, index, v, cap)
+        return delta_only_degree_diff(sub, v, tk, tl)
+
+    return jax.vmap(one)(vs, tks, tls)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _GroupKey:
+    """Everything that must be equal for two queries to share one
+    device program (static shapes / static jit args / anchor)."""
+
+    plan: str
+    kind: str
+    scope: str
+    measure: str
+    agg: str            # "" unless kind == "agg"
+    anchor_id: int
+    indexed: bool
+    windowed: bool
+    partial: bool
+
+
+class HistoricalQueryEngine:
+    """Planner + batched executor over one store state.
+
+    Construct via ``HistoricalQueryEngine.from_store(store)`` (or let
+    ``TemporalGraphStore.engine()`` cache one).  The engine is a pure
+    view: it never mutates the store; re-create it (or let the store's
+    cache invalidate) after ingesting new ops.
+    """
+
+    def __init__(self, current: DenseGraph, delta: Delta, t_cur: int, *,
+                 mat_times: Sequence[int] = (),
+                 mat_snapshots: Sequence[DenseGraph] = (),
+                 index: NodeIndex | None = None, node_cap: int = 1024,
+                 selection: Literal["time", "ops"] = "ops",
+                 passes: int = 2, series_budget: int = 1 << 24):
+        self.current = current
+        self.delta = delta
+        self.t_cur = int(t_cur)
+        self.index = index
+        self.node_cap = int(node_cap)
+        self.passes = int(passes)
+        # max elements of the shared all-nodes degree series a single
+        # agg group may materialize (i32; 1<<24 ≈ 64 MB)
+        self.series_budget = int(series_budget)
+        # One host copy of the sorted timestamps: all per-query costing
+        # (anchor selection + plan choice) runs sync-free on it.
+        self.t_host = np.asarray(delta.t)
+        self.selector = AnchorSelector(mat_times, mat_snapshots,
+                                       t_cur=self.t_cur, current=current,
+                                       t_host=self.t_host)
+        self.planner = Planner(self.selector, n_cap=current.n_cap,
+                               index=index, node_cap=node_cap,
+                               selection=selection)
+
+    @classmethod
+    def from_store(cls, store, *, indexed: bool = False,
+                   node_cap: int = 1024,
+                   selection: Literal["time", "ops"] = "ops"):
+        return cls(store.current, store.delta(), store.t_cur,
+                   mat_times=store.materialized.times,
+                   mat_snapshots=store.materialized.snapshots,
+                   index=store.node_index() if indexed else None,
+                   node_cap=node_cap, selection=selection)
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self, q: Query) -> PlanChoice:
+        return self.planner.choose(q, self.delta, self.t_cur)
+
+    def _resolve(self, q: Query, plan: str, indexed: bool | None,
+                 partial_rows: bool | None,
+                 windowed: bool | None) -> PlanChoice:
+        """Forced-plan / forced-variant resolution (test compatibility:
+        mirrors the ``plans.evaluate`` kwargs)."""
+        if plan == "auto":
+            c = self.plan(q)
+        else:
+            if plan not in applicable_plans(q):
+                raise ValueError(f"plan {plan} not applicable to {q}")
+            anchor = (self.selector.select(q.t_k, self.delta)
+                      if plan == "two_phase"
+                      else AnchorCandidate(-1, self.t_cur, 0))
+            c = PlanChoice(plan=plan, anchor_id=anchor.anchor_id,
+                           t_anchor=anchor.t)
+        if indexed is not None:
+            c = dataclasses.replace(
+                c, indexed=indexed and self.index is not None)
+        if partial_rows is not None:
+            c = dataclasses.replace(c, partial=partial_rows)
+        if windowed is not None:
+            c = dataclasses.replace(c, windowed=windowed)
+        if c.plan != "two_phase" and q.measure != "degree":
+            # The delta-only/hybrid kernels are degree-specialised;
+            # mirror plans.evaluate's fallback to two-phase for every
+            # other measure instead of running the wrong kernel.
+            anchor = self.selector.select(q.t_k, self.delta)
+            c = dataclasses.replace(c, plan="two_phase",
+                                    anchor_id=anchor.anchor_id,
+                                    t_anchor=anchor.t, indexed=False)
+        if c.plan != "two_phase":
+            c = dataclasses.replace(c, partial=False, windowed=False,
+                                    anchor_id=-1, t_anchor=self.t_cur)
+        return c
+
+    def _group_key(self, q: Query, c: PlanChoice) -> _GroupKey:
+        return _GroupKey(plan=c.plan, kind=q.kind, scope=q.scope,
+                         measure=q.measure, agg=q.agg if q.kind == "agg"
+                         else "", anchor_id=c.anchor_id,
+                         indexed=c.indexed, windowed=c.windowed,
+                         partial=c.partial)
+
+    # ------------------------------------------------------------ execution
+
+    def _group_delta(self, key: _GroupKey, t_anchor: int,
+                     ts: np.ndarray) -> Delta:
+        """For a windowed two-phase group: slice the delta once to the
+        union window covering every query in the group (temporal
+        index, pow2 capacity).  Reconstruction only reads in-window
+        ops, so results are identical to the full log."""
+        if not key.windowed:
+            return self.delta
+        t_lo = int(min(ts.min(), t_anchor))
+        t_hi = int(max(ts.max(), t_anchor))
+        n_win = _window_ops_host(self.t_host, t_lo, t_hi)
+        cap = _pow2(n_win, 64)
+        if cap >= self.delta.capacity:
+            return self.delta
+        return gather_window(self.delta, t_lo, t_hi, cap)
+
+    def _run_group(self, key: _GroupKey, qs: list[Query]):
+        """Dispatch one group as a single device program; returns the
+        (padded) device array — callers slice to len(qs) after one
+        batch-wide ``device_get``, so group dispatches overlap."""
+        b = len(qs)
+        pad = _pow2(b) - b
+        tks = np.asarray([q.t_k for q in qs] + [qs[-1].t_k] * pad,
+                         np.int32)
+        last_tl = qs[-1].t_l if qs[-1].t_l is not None else qs[-1].t_k
+        tls = np.asarray([q.t_l if q.t_l is not None else q.t_k
+                          for q in qs] + [last_tl] * pad, np.int32)
+        last_v = qs[-1].v if qs[-1].v is not None else 0
+        vs = np.asarray([q.v if q.v is not None else 0 for q in qs]
+                        + [last_v] * pad, np.int32)
+        tks_d, tls_d, vs_d = map(jnp.asarray, (tks, tls, vs))
+
+        if key.plan == "delta_only":
+            if key.indexed:
+                out = batch_delta_only_diff_indexed(
+                    self.delta, self.index, vs_d, tks_d, tls_d,
+                    self.node_cap)
+            else:
+                out = batch_delta_only_diff(self.delta, vs_d, tks_d, tls_d)
+        elif key.plan == "hybrid":
+            if key.kind == "point":
+                if key.indexed:
+                    out = batch_hybrid_point_indexed(
+                        self.current, self.delta, self.index, vs_d, tks_d,
+                        self.t_cur, self.node_cap)
+                else:
+                    out = batch_hybrid_point(self.current, self.delta,
+                                             vs_d, tks_d, self.t_cur)
+            elif key.kind == "diff":
+                if key.indexed:
+                    out = batch_hybrid_diff_indexed(
+                        self.current, self.delta, self.index, vs_d, tks_d,
+                        tls_d, self.t_cur, self.node_cap)
+                else:
+                    out = batch_hybrid_diff(self.current, self.delta,
+                                            vs_d, tks_d, tls_d, self.t_cur)
+            else:  # agg
+                # Shared series covers the union window [t0, max t_l];
+                # per-query values past each query's own t_l are masked
+                # inside the kernel, so results are bit-identical for
+                # any capacity ≥ width (pow2 bounds recompiles).
+                t0 = int(tks[:b].min())
+                w_total = _pow2(int(tls[:b].max()) - t0 + 1)
+                w_q = _pow2(max(int(tl - tk) + 1
+                                for tk, tl in zip(tks[:b], tls[:b])))
+                if w_total * self.current.n_cap > self.series_budget:
+                    # one temporally-distant query would inflate the
+                    # shared series to O(w_total · n_cap); fall back to
+                    # per-node series (identical values, no n_cap term)
+                    out = batch_hybrid_agg_per_node(
+                        self.current, self.delta, vs_d, tks_d, tls_d,
+                        w_q, key.agg)
+                else:
+                    out = batch_hybrid_agg(self.current, self.delta,
+                                           vs_d, tks_d, tls_d, t0,
+                                           self.t_cur, w_total, w_q,
+                                           key.agg)
+        else:  # two_phase
+            t_anchor, g_anchor = self.selector.get(key.anchor_id)
+            d = self._group_delta(
+                key, t_anchor,
+                np.concatenate([tks, tls]) if key.kind != "point" else tks)
+            if key.kind == "point":
+                out = batch_two_phase_point(
+                    g_anchor, d, t_anchor, tks_d, vs_d,
+                    measure=key.measure, scope=key.scope,
+                    use_partial=key.partial, passes=self.passes)
+            elif key.kind == "diff":
+                out = batch_two_phase_diff(
+                    g_anchor, d, t_anchor, tks_d, tls_d, vs_d,
+                    measure=key.measure, scope=key.scope,
+                    use_partial=key.partial, passes=self.passes)
+            else:
+                nb = _pow2(max(int(tl - tk) + 1
+                               for tk, tl in zip(tks[:b], tls[:b])))
+                out = batch_two_phase_agg(
+                    g_anchor, d, t_anchor, tks_d, tls_d, vs_d,
+                    measure=key.measure, scope=key.scope,
+                    num_buckets=nb, agg=key.agg,
+                    use_partial=key.partial, passes=self.passes)
+        return out
+
+    def evaluate_many(self, queries: Sequence[Query], plan: str = "auto",
+                      *, indexed: bool | None = None,
+                      partial_rows: bool | None = None,
+                      windowed: bool | None = None,
+                      return_choices: bool = False):
+        """Evaluate B historical queries, grouped by (plan, anchor) and
+        executed as one device program per group.
+
+        ``plan``/``indexed``/``partial_rows``/``windowed`` force the
+        planner's choice uniformly (same semantics as
+        ``plans.evaluate``); the default lets the cost model decide per
+        query.  Returns a list of scalars in query order (and the
+        per-query ``PlanChoice`` list when ``return_choices``).
+        """
+        choices = [self._resolve(q, plan, indexed, partial_rows, windowed)
+                   for q in queries]
+        groups: dict[_GroupKey, list[int]] = {}
+        for i, (q, c) in enumerate(zip(queries, choices)):
+            groups.setdefault(self._group_key(q, c), []).append(i)
+        # Dispatch every group first (async), then fetch everything with
+        # one device_get so transfers don't serialize the group programs.
+        outs = [(idxs, self._run_group(key, [queries[i] for i in idxs]))
+                for key, idxs in groups.items()]
+        fetched = jax.device_get([o for _, o in outs])
+        results: list = [None] * len(queries)
+        for (idxs, _), host in zip(outs, fetched):
+            arr = np.asarray(host)
+            for j, i in enumerate(idxs):
+                results[i] = arr[j]
+        if return_choices:
+            return results, choices
+        return results
+
+    def evaluate(self, q: Query, plan: str = "auto", **kw):
+        """Single-query entry point: ``evaluate_many([q])[0]``."""
+        return self.evaluate_many([q], plan, **kw)[0]

@@ -18,11 +18,9 @@ import dataclasses
 from typing import Literal
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.delta import Delta
 from repro.core.graph import DenseGraph
-from repro.core.index import count_window_ops
 
 
 @dataclasses.dataclass
@@ -43,17 +41,17 @@ class MaterializedStore:
         Returns (t_anchor, snapshot).  ``method='time'`` is the paper's
         time-based selection; ``'ops'`` is operation-based (optimal #ops
         applied), priced with the temporal index.
+
+        Thin wrapper kept for compatibility: candidate costing lives in
+        the engine's ``AnchorSelector`` (which additionally lets SG_tcur
+        compete when given a current snapshot).
         """
         if not self.times:
             raise ValueError("no materialized snapshots")
-        if method == "time":
-            costs = [abs(t_k - tl) for tl in self.times]
-        else:
-            costs = [int(count_window_ops(delta, min(tl, t_k),
-                                          max(tl, t_k)))
-                     for tl in self.times]
-        best = int(np.argmin(costs))
-        return self.times[best], self.snapshots[best]
+        from repro.core.engine import AnchorSelector
+        selector = AnchorSelector(self.times, self.snapshots)
+        cand = selector.select(t_k, delta, method)
+        return selector.get(cand.anchor_id)
 
 
 @dataclasses.dataclass

@@ -19,6 +19,13 @@ from repro.core.graph import DenseGraph
 from repro.core.reconstruct import reconstruct_dense
 
 
+def seed_mask(n_cap: int, v) -> jax.Array:
+    """Single-node seed set for a node-centric query — the V' of the
+    paper's partial reconstruction.  Shared by ``plans.two_phase`` and
+    the engine's batched executor so both build bit-identical seeds."""
+    return jnp.zeros((n_cap,), bool).at[v].set(True)
+
+
 @partial(jax.jit, static_argnames=("passes",))
 def closure_mask(current: DenseGraph, delta: Delta, seed_mask: jax.Array,
                  t_lo, t_hi, passes: int = 2) -> jax.Array:

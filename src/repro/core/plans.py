@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core.delta import ADD_EDGE, REM_EDGE, Delta
 from repro.core.graph import DenseGraph
 from repro.core.index import NodeIndex, gather_node_ops, gather_window
-from repro.core.partial import partial_reconstruct
+from repro.core.partial import partial_reconstruct, seed_mask
 from repro.core.queries import GLOBAL_MEASURES, NODE_MEASURES
 from repro.core.reconstruct import (node_degree_series, reconstruct_dense,
                                     reconstruct_sequential)
@@ -53,7 +53,11 @@ def _measure(g: DenseGraph, q: Query):
 
 def _aggregate(vals: jax.Array, agg: Aggregate):
     if agg == "mean":
-        return jnp.mean(vals.astype(jnp.float32))
+        # Explicit sum/width (not jnp.mean, which lowers to a
+        # reciprocal-multiply): keeps the scalar path bit-identical to
+        # the engine's masked batched aggregation.
+        v = vals.astype(jnp.float32)
+        return jnp.sum(v) / v.shape[0]
     return jnp.min(vals) if agg == "min" else jnp.max(vals)
 
 
@@ -76,8 +80,8 @@ def two_phase(current: DenseGraph, delta: Delta, t_cur, q: Query, *,
         if sequential:
             return reconstruct_sequential(current, delta, t_cur, t)
         if partial_rows and q.scope == "node":
-            seed = jnp.zeros((current.n_cap,), bool).at[q.v].set(True)
-            return partial_reconstruct(current, delta, t_cur, t, seed,
+            return partial_reconstruct(current, delta, t_cur, t,
+                                       seed_mask(current.n_cap, q.v),
                                        passes=passes)
         return reconstruct_dense(current, delta, t_cur, t)
 
@@ -149,6 +153,23 @@ def hybrid_point_degree_indexed(current: DenseGraph, delta: Delta,
     return hybrid_point_degree(current, sub, v, t_k, t_cur)
 
 
+def masked_aggregate(vals: jax.Array, width, num_buckets: int,
+                     agg: Aggregate):
+    """Aggregate the first ``width`` of ``num_buckets`` bucketed values
+    (the tail is padding).  Shared by the scalar hybrid plan and the
+    engine's batched executors: one definition keeps the bit-identity
+    guarantee between the scalar and batched paths (exact f32 sum of
+    integer values, true division by the width — not ``jnp.mean``,
+    which lowers to a reciprocal-multiply)."""
+    keep = jnp.arange(num_buckets, dtype=jnp.int32) < width
+    if agg == "mean":
+        return jnp.sum(jnp.where(keep, vals, 0).astype(jnp.float32)) / width
+    big = jnp.asarray(1 << 30, vals.dtype)
+    if agg == "min":
+        return jnp.min(jnp.where(keep, vals, big))
+    return jnp.max(jnp.where(keep, vals, -big))
+
+
 @partial(jax.jit, static_argnames=("num_buckets", "agg"))
 def hybrid_agg_degree(current: DenseGraph, delta: Delta, v, t_k, t_l,
                       num_buckets: int, agg: Aggregate = "mean"):
@@ -156,14 +177,7 @@ def hybrid_agg_degree(current: DenseGraph, delta: Delta, v, t_k, t_l,
     reverse-cumulative correction per time unit (one delta pass)."""
     series = node_degree_series(current.degree(v), delta, v, t_k,
                                 num_buckets)
-    width = t_l - t_k + 1
-    keep = jnp.arange(num_buckets) < width
-    if agg == "mean":
-        return jnp.sum(jnp.where(keep, series, 0).astype(jnp.float32)) / width
-    big = jnp.int32(1 << 30)
-    if agg == "min":
-        return jnp.min(jnp.where(keep, series, big))
-    return jnp.max(jnp.where(keep, series, -big))
+    return masked_aggregate(series, t_l - t_k + 1, num_buckets, agg)
 
 
 def hybrid_agg_degree_windowed(current: DenseGraph, delta: Delta, v, t_k,
@@ -201,10 +215,23 @@ def evaluate(current: DenseGraph, delta: Delta, t_cur, q: Query,
              node_cap: int = 1024, **kw):
     """Evaluate a query with the cheapest applicable plan (or a forced
     one).  Degree queries get the specialised delta-only/hybrid paths;
-    everything else falls back to two-phase, as in Table 2."""
+    everything else falls back to two-phase, as in Table 2.
+
+    Thin wrapper kept for compatibility: plan *choice* is delegated to
+    the engine's cost-based ``Planner`` (``core.engine``); the kernels
+    below remain the single-query execution path.
+    """
     plans = applicable_plans(q)
     if plan == "auto":
-        plan = plans[-1] if q.measure == "degree" else "two_phase"
+        import numpy as np
+        from repro.core.engine import AnchorSelector, Planner
+        # one host copy of the timestamps keeps plan costing free of
+        # per-candidate blocking device syncs
+        selector = AnchorSelector((), (), t_cur=t_cur, current=current,
+                                  t_host=np.asarray(delta.t))
+        planner = Planner(selector, n_cap=current.n_cap, index=index,
+                          node_cap=node_cap)
+        plan = planner.choose(q, delta, t_cur).plan
     if plan not in plans:
         raise ValueError(f"plan {plan} not applicable to {q}")
 

@@ -24,6 +24,7 @@ import numpy as np
 from repro.core import queries as Q
 from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
                               T_PAD, Delta)
+from repro.core.engine import HistoricalQueryEngine
 from repro.core.graph import DenseGraph, EdgeGraph
 from repro.core.index import NodeIndex, build_node_index_host
 from repro.core.materialize import (MaterializationPolicy, MaterializedStore)
@@ -70,6 +71,7 @@ class TemporalGraphStore:
         self._t_last_mat = 0
         self._delta_cache: Delta | None = None
         self._index_cache: NodeIndex | None = None
+        self._engine_cache: HistoricalQueryEngine | None = None
 
     # ---------------------------------------------------------------- ingest
 
@@ -160,6 +162,7 @@ class TemporalGraphStore:
                 n_acc += 1
         self._delta_cache = None
         self._index_cache = None
+        self._engine_cache = None
         return n_acc
 
     def advance_to(self, t_next: int) -> None:
@@ -172,6 +175,7 @@ class TemporalGraphStore:
         self.current = reconstruct_dense(self.current, delta,
                                          self.t_cur, t_next)
         self.t_cur = t_next
+        self._engine_cache = None
         self._ops_since_mat += new_ops
         if self.policy is not None:
             last = (self.materialized.snapshots[-1]
@@ -243,18 +247,17 @@ class TemporalGraphStore:
         operation-based anchor selection pay off in the *vectorized*
         engine: the LWW scatter then does O(window) work instead of
         O(M) masked work (see EXPERIMENTS §Perf — for the sequential
-        engine the paper's selection already pays off unmodified)."""
+        engine the paper's selection already pays off unmodified).
+
+        Anchor choice (current snapshot competing with every
+        materialized one) is delegated to the engine's
+        ``AnchorSelector``.
+        """
         delta = self.delta()
         if use_materialized and self.materialized.times:
-            t_a, g_a = self.materialized.select(t, delta, method=selection)
-            # current snapshot competes with the materialized ones
-            from repro.core.index import count_window_ops
-            cost_cur = int(count_window_ops(delta, min(t, self.t_cur),
-                                            max(t, self.t_cur)))
-            cost_mat = int(count_window_ops(delta, min(t, t_a),
-                                            max(t, t_a)))
-            if cost_cur < cost_mat:
-                t_a, g_a = self.t_cur, self.current
+            selector = self.engine().selector
+            cand = selector.select(t, delta, method=selection)
+            t_a, g_a = selector.get(cand.anchor_id)
         else:
             t_a, g_a = self.t_cur, self.current
         if windowed:
@@ -266,11 +269,42 @@ class TemporalGraphStore:
                                       cap)
         return reconstruct_dense(g_a, delta, t_a, t)
 
+    def engine(self, *, indexed: bool = False,
+               node_cap: int = 1024) -> HistoricalQueryEngine:
+        """The unified historical-query engine over the current store
+        state (cached; invalidated by ingest/advance, by a change to
+        the materialized-snapshot set, by a different ``node_cap``, or
+        by asking for an index the cached engine lacks.  An engine
+        built with an index keeps it for later unindexed calls — the
+        planner simply has more statistics available)."""
+        e = self._engine_cache
+        if (e is None or (indexed and e.index is None)
+                or e.node_cap != node_cap
+                or e.selector.times != self.materialized.times):
+            keep_index = indexed or (e is not None and e.index is not None)
+            e = HistoricalQueryEngine.from_store(
+                self, indexed=keep_index, node_cap=node_cap)
+            self._engine_cache = e
+        return e
+
     def query(self, q: Query, plan: str = "auto", indexed: bool = False,
               **kw):
         index = self.node_index() if indexed else None
+        if plan == "auto":
+            # the cached engine carries the host timestamp copy, so
+            # auto plan choice costs numpy binary searches, not a
+            # device transfer per query
+            plan = self.engine().planner.choose(q, self.delta(),
+                                                self.t_cur).plan
         return evaluate(self.current, self.delta(), self.t_cur, q,
                         index=index, plan=plan, **kw)
+
+    def evaluate_many(self, queries, plan: str = "auto", *,
+                      indexed: bool = False, **kw):
+        """Batched multi-query serving: route through the engine's
+        grouped executor (one device program per (plan, anchor) group)."""
+        return self.engine(indexed=indexed).evaluate_many(
+            queries, plan, indexed=True if indexed else None, **kw)
 
     # stats used by benchmarks (paper Table 3)
     def stats(self) -> dict:

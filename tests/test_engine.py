@@ -1,0 +1,277 @@
+"""Unified engine (core/engine.py): parity with the single-query path,
+batch-composition invariance, anchor selection, and planner sanity.
+
+The acceptance contract: ``evaluate_many([q])`` bit-matches
+``plans.evaluate(q)`` for every plan × query-kind combination, and
+batched results are invariant to batch composition/order.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import (AnchorSelector, HistoricalQueryEngine,
+                               Planner)
+from repro.core.plans import Query, applicable_plans
+
+
+def _item(x):
+    return np.asarray(x).item()
+
+
+def _ts(store, frac):
+    return max(1, int(store.t_cur * frac))
+
+
+def _engine(store, indexed=False):
+    return store.engine(indexed=indexed)
+
+
+# ---------------------------------------------------------------------------
+# Parity: every plan × kind combination (Table 2 matrix)
+# ---------------------------------------------------------------------------
+
+
+def _query_matrix(store):
+    """One query per (kind, scope) cell, with integer-exact measures so
+    bitwise comparison is meaningful."""
+    tc = store.t_cur
+    return [
+        Query("point", "node", "degree", t_k=tc // 3, v=5),
+        Query("diff", "node", "degree", t_k=tc // 4, t_l=3 * tc // 4, v=9),
+        Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 6, v=3,
+              agg="mean"),
+        Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 6, v=3,
+              agg="min"),
+        Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 6, v=3,
+              agg="max"),
+        Query("point", "global", "num_edges", t_k=tc // 2),
+        Query("point", "global", "num_nodes", t_k=tc // 2),
+        Query("diff", "global", "num_edges", t_k=tc // 4, t_l=3 * tc // 4),
+        Query("agg", "global", "num_edges", t_k=tc // 2, t_l=tc // 2 + 4,
+              agg="max"),
+    ]
+
+
+def test_parity_all_plan_kind_combinations(small_history):
+    """evaluate_many([q]) == plans.evaluate(q), bit for bit, for every
+    applicable plan of every query-kind/scope cell."""
+    store, _ = small_history
+    eng = _engine(store)
+    for q in _query_matrix(store):
+        for plan in applicable_plans(q):
+            single = _item(store.query(q, plan=plan))
+            batched = _item(eng.evaluate_many([q], plan=plan)[0])
+            assert batched == single, (q, plan)
+
+
+def test_parity_variants(small_history):
+    """Indexed / partial / windowed variants bit-match their
+    single-query counterparts."""
+    store, _ = small_history
+    eng = _engine(store, indexed=True)
+    tc = store.t_cur
+    q_point = Query("point", "node", "degree", t_k=tc // 3, v=5)
+    q_diff = Query("diff", "node", "degree", t_k=tc // 4, t_l=3 * tc // 4,
+                   v=9)
+
+    for q, plan in ((q_point, "hybrid"), (q_diff, "delta_only"),
+                    (q_diff, "hybrid")):
+        single = _item(store.query(q, plan=plan, indexed=True))
+        batched = _item(eng.evaluate_many([q], plan=plan, indexed=True)[0])
+        assert batched == single, (q, plan, "indexed")
+
+    for q in (q_point, q_diff):
+        single = _item(store.query(q, plan="two_phase", partial_rows=True))
+        batched = _item(eng.evaluate_many([q], plan="two_phase",
+                                          partial_rows=True)[0])
+        assert batched == single, (q, "partial")
+        # windowed reconstruction is exact: same bits as the full log
+        full = _item(store.query(q, plan="two_phase"))
+        win = _item(eng.evaluate_many([q], plan="two_phase",
+                                      windowed=True)[0])
+        assert win == full, (q, "windowed")
+
+
+def test_parity_auto_plan(small_history):
+    """Auto-planned batched results match the brute-force oracle."""
+    store, bf = small_history
+    eng = _engine(store)
+    rng = np.random.default_rng(7)
+    qs, expect = [], []
+    for _ in range(24):
+        v = int(rng.integers(0, store.n_cap))
+        t1 = int(rng.integers(1, store.t_cur))
+        t2 = min(store.t_cur, t1 + int(rng.integers(0, 6)))
+        kind = ["point", "diff", "agg"][int(rng.integers(0, 3))]
+        if kind == "point":
+            qs.append(Query("point", "node", "degree", t_k=t1, v=v))
+            expect.append(bf.degree(v, t1))
+        elif kind == "diff":
+            qs.append(Query("diff", "node", "degree", t_k=t1, t_l=t2, v=v))
+            expect.append(abs(bf.degree(v, t2) - bf.degree(v, t1)))
+        else:
+            qs.append(Query("agg", "node", "degree", t_k=t1, t_l=t2, v=v,
+                            agg="max"))
+            expect.append(max(bf.degree_series(v, t1, t2)))
+    got = eng.evaluate_many(qs)
+    for q, g, e in zip(qs, got, expect):
+        assert _item(g) == e, q
+
+
+# ---------------------------------------------------------------------------
+# Batch composition / order invariance
+# ---------------------------------------------------------------------------
+
+
+def test_batch_order_invariance(small_history):
+    store, _ = small_history
+    eng = _engine(store)
+    qs = _query_matrix(store) * 3
+    base = [_item(r) for r in eng.evaluate_many(qs)]
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(qs))
+    shuf = [_item(r) for r in eng.evaluate_many([qs[i] for i in perm])]
+    for j, i in enumerate(perm):
+        assert shuf[j] == base[i]
+
+
+def test_batch_composition_invariance(small_history):
+    """A query's result does not depend on what else is in the batch."""
+    store, _ = small_history
+    eng = _engine(store)
+    qs = _query_matrix(store)
+    solo = [_item(eng.evaluate_many([q])[0]) for q in qs]
+    together = [_item(r) for r in eng.evaluate_many(qs)]
+    assert solo == together
+    # and in a big mixed batch with duplicates
+    big = qs * 5
+    got = [_item(r) for r in eng.evaluate_many(big)]
+    assert got == solo * 5
+
+
+# ---------------------------------------------------------------------------
+# Anchor selection
+# ---------------------------------------------------------------------------
+
+
+def test_anchor_selector_prefers_cheap_anchor(small_history):
+    store, bf = small_history
+    # materialize a mid-history snapshot; queries near it should anchor
+    # there, queries near t_cur should anchor at the current snapshot
+    t_mid = store.t_cur // 2
+    g_mid = store.snapshot_at(t_mid, use_materialized=False)
+    store.materialized.add(t_mid, g_mid)
+    store._engine_cache = None
+    eng = _engine(store)
+    delta = store.delta()
+    near_mid = eng.selector.select(t_mid + 1, delta, "ops")
+    assert near_mid.anchor_id == 0
+    near_cur = eng.selector.select(store.t_cur, delta, "ops")
+    assert near_cur.anchor_id == -1
+    # results stay exact from either anchor
+    for frac in (0.3, 0.55, 0.95):
+        t = _ts(store, frac)
+        g = store.snapshot_at(t)
+        assert np.array_equal(np.asarray(g.adj), bf.adj(t)), t
+    # cleanup (session-scoped fixture)
+    store.materialized.times.clear()
+    store.materialized.snapshots.clear()
+    store._engine_cache = None
+
+
+def test_anchor_selector_no_candidates():
+    from repro.core.delta import empty_delta
+    sel = AnchorSelector((), ())
+    with pytest.raises(ValueError):
+        sel.select(3, empty_delta(4))
+
+
+def test_batched_two_phase_uses_materialized_anchor(small_history):
+    """Two-phase groups anchored at a materialized snapshot return the
+    same values as the current-anchored single path."""
+    store, _ = small_history
+    t_mid = store.t_cur // 2
+    g_mid = store.snapshot_at(t_mid, use_materialized=False)
+    store.materialized.add(t_mid, g_mid)
+    store._engine_cache = None
+    eng = _engine(store)
+    qs = [Query("point", "node", "degree", t_k=t_mid + 1, v=v)
+          for v in (2, 5, 11, 17)]
+    res, choices = eng.evaluate_many(qs, plan="two_phase",
+                                     return_choices=True)
+    assert all(c.anchor_id == 0 for c in choices)
+    for q, r in zip(qs, res):
+        assert _item(r) == _item(store.query(q, plan="two_phase")), q
+    store.materialized.times.clear()
+    store.materialized.snapshots.clear()
+    store._engine_cache = None
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+def test_planner_picks_applicable_and_cheap(small_history):
+    store, _ = small_history
+    eng = _engine(store)
+    tc = store.t_cur
+    for q in _query_matrix(store):
+        c = eng.plan(q)
+        assert c.plan in applicable_plans(q)
+    # non-degree measures must fall back to two-phase (Table 2)
+    c = eng.plan(Query("point", "global", "density", t_k=tc // 2))
+    assert c.plan == "two_phase"
+    # a recent degree diff: the delta-only window is tiny, so the
+    # planner must not choose a plan costlier than two-phase
+    q = Query("diff", "node", "degree", t_k=tc - 2, t_l=tc - 1, v=1)
+    c = eng.plan(q)
+    assert c.plan in ("delta_only", "hybrid")
+
+
+def test_non_degree_measures_match_scalar_path(small_history):
+    """Non-degree node measures: auto planning must not enable unsound
+    partial reconstruction, and forcing a degree-specialised plan must
+    fall back to two-phase exactly like plans.evaluate does."""
+    store, _ = small_history
+    eng = _engine(store)
+    tc = store.t_cur
+    for q in (Query("diff", "node", "neighborhood2", t_k=tc // 4,
+                    t_l=3 * tc // 4, v=5),
+              Query("point", "node", "neighborhood2", t_k=tc // 3, v=5),
+              Query("agg", "node", "induced_avg_degree", t_k=tc // 2,
+                    t_l=tc // 2 + 3, v=5)):
+        assert _item(eng.evaluate_many([q])[0]) == _item(store.query(q)), q
+        for plan in applicable_plans(q):
+            got = _item(eng.evaluate_many([q], plan=plan)[0])
+            assert got == _item(store.query(q, plan=plan)), (q, plan)
+
+
+def test_agg_series_budget_fallback(small_history):
+    """When the union window is too wide for the shared all-nodes
+    series, the per-node fallback returns bit-identical results."""
+    from repro.core.engine import HistoricalQueryEngine
+    store, _ = small_history
+    tc = store.t_cur
+    qs = [Query("agg", "node", "degree", t_k=1, t_l=4, v=2, agg="mean"),
+          Query("agg", "node", "degree", t_k=tc - 4, t_l=tc - 1, v=7,
+                agg="mean")]
+    normal = store.engine().evaluate_many(qs)
+    tiny = HistoricalQueryEngine(
+        store.current, store.delta(), store.t_cur,
+        mat_times=store.materialized.times,
+        mat_snapshots=store.materialized.snapshots, series_budget=1)
+    fallback = tiny.evaluate_many(qs)
+    assert [_item(a) for a in normal] == [_item(b) for b in fallback]
+
+
+def test_store_query_auto_routes_through_planner(small_history):
+    """plans.evaluate(plan='auto') delegates choice to the Planner and
+    still matches the oracle."""
+    store, bf = small_history
+    t = _ts(store, 0.5)
+    q = Query("point", "node", "degree", t_k=t, v=5)
+    assert _item(store.query(q)) == bf.degree(5, t)
+    q2 = Query("diff", "node", "degree", t_k=_ts(store, 0.3),
+               t_l=_ts(store, 0.8), v=9)
+    assert _item(store.query(q2)) == abs(bf.degree(9, _ts(store, 0.8))
+                                         - bf.degree(9, _ts(store, 0.3)))

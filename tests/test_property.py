@@ -6,6 +6,9 @@ edge-layout equivalence for arbitrary query times/nodes.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (reconstruct_dense, reconstruct_edge,
