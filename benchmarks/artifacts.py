@@ -1,0 +1,59 @@
+"""Shared BENCH_*.json artifact schema.
+
+Every benchmark that persists results writes through here so the
+artifacts are machine-comparable across PRs:
+
+  {
+    "name":         benchmark name ("engine_batch", "distributed", ...),
+    "git_sha":      short sha of the work tree (or "unknown"),
+    "device_count": visible jax devices when the bench ran,
+    "schema":       1,
+    "results":      benchmark-specific payload (qps numbers etc.)
+  }
+
+``write_artifact`` refreshes the file atomically (write + rename) so a
+crashed bench never leaves a truncated artifact behind.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SCHEMA_VERSION = 1
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=HERE, capture_output=True, text=True,
+                             timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def make_artifact(name: str, results: dict,
+                  device_count: int | None = None) -> dict:
+    if device_count is None:
+        import jax
+        device_count = len(jax.devices())
+    return {
+        "name": name,
+        "git_sha": git_sha(),
+        "device_count": device_count,
+        "schema": SCHEMA_VERSION,
+        "results": results,
+    }
+
+
+def write_artifact(path: str, artifact: dict) -> str:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(artifact, fh, indent=2)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path

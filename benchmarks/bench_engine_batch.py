@@ -18,7 +18,6 @@ artifacts.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -98,6 +97,17 @@ def run(n_nodes: int = 300, n_queries: int = 256,
     return rows, result
 
 
+def write_json(result: dict) -> None:
+    """Refresh BENCH_engine_batch.json with the shared artifact schema
+    (benchmarks/artifacts.py)."""
+    import sys
+    root = os.path.dirname(HERE)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.artifacts import make_artifact, write_artifact
+    write_artifact(OUT_JSON, make_artifact("engine_batch", result))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -107,9 +117,13 @@ def main() -> None:
                        reps=2 if args.fast else 3)
     for name, val, note in rows:
         print(f"{name},{val},{note}")
-    with open(OUT_JSON, "w") as fh:
-        json.dump(result, fh, indent=2)
-    print(f"wrote {OUT_JSON}")
+    if args.fast:
+        # --fast is a sanity tier: don't clobber the committed
+        # default-config artifact with incomparable numbers
+        print(f"--fast: skipping {OUT_JSON} refresh")
+    else:
+        write_json(result)
+        print(f"wrote {OUT_JSON}")
     s64 = result["speedup_vs_b1"].get("64")
     if s64 is not None and s64 < 5.0:
         print(f"WARNING: B=64 speedup {s64:.1f}x below the 5x target")

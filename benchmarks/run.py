@@ -1,6 +1,12 @@
 """Benchmark driver: one function per paper table/figure (+ the
 framework benches). Prints ``name,us_per_call,derived`` CSV lines.
 
+Sections that persist results refresh their ``BENCH_*.json`` artifacts
+through the shared schema in ``benchmarks/artifacts.py`` (name, qps,
+device_count, git sha), so artifacts are comparable across PRs.  Any
+section raising an exception is reported AND makes the driver exit
+non-zero — a red benchmark run never looks green.
+
   PYTHONPATH=src python -m benchmarks.run [--fast]
 """
 from __future__ import annotations
@@ -14,6 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller graphs / fewer reps")
+    ap.add_argument("--skip-distributed", action="store_true",
+                    help="skip the multi-process device-count sweep")
     args = ap.parse_args()
 
     failures = []
@@ -71,14 +79,33 @@ def main() -> None:
     from benchmarks import bench_engine_batch
 
     def eb():
-        rows, _ = bench_engine_batch.run(
+        rows, result = bench_engine_batch.run(
             n_nodes=150 if args.fast else 300,
             n_queries=64 if args.fast else 256,
             reps=2 if args.fast else 3)
         for name, val, note in rows:
             print(f"{name},{val},{note}")
+        if not args.fast:   # --fast numbers are not comparable
+            bench_engine_batch.write_json(result)
 
     section("engine batched serving", eb)
+
+    # Multi-device serving (qps vs device count, subprocess sweep)
+    from benchmarks import bench_distributed
+
+    def dist():
+        dargs = argparse.Namespace(
+            n_nodes=150 if args.fast else 300,
+            n_queries=64 if args.fast else 256,
+            reps=2 if args.fast else 3)
+        rows, results = bench_distributed.run(dargs)
+        for name, val, note in rows:
+            print(f"{name},{val},{note}")
+        if not args.fast:
+            bench_distributed.write_json(results)
+
+    if not args.skip_distributed:
+        section("distributed serving", dist)
 
     # Kernels
     from benchmarks import bench_kernels

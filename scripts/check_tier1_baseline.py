@@ -1,0 +1,135 @@
+"""Baseline-gated tier-1 test run (the CI gate).
+
+The seed ships with known test failures (jax-version drift in the
+LM-model/runtime stack — see tests/BASELINE.json), so a plain
+``pytest`` exit code cannot gate a PR.  This script runs tier-1,
+collects the FAILED/ERROR test ids, and compares them against the
+committed baseline: only *new* failures fail the gate.  Tests that
+started passing are reported (refresh the baseline with ``--update``
+to lock the improvement in).
+
+Usage:
+  PYTHONPATH=src python scripts/check_tier1_baseline.py [--update] \
+      [--baseline PATH] [pytest-args...]
+
+Examples:
+  # the CI fast lane
+  python scripts/check_tier1_baseline.py -- -m "not multidevice"
+  # the CI multidevice lane
+  python scripts/check_tier1_baseline.py -- -m multidevice
+  # refresh the baseline after fixing tests
+  python scripts/check_tier1_baseline.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(ROOT, "tests", "BASELINE.json")
+
+_ID_RE = re.compile(r"^(FAILED|ERROR)\s+(\S+)")
+
+
+def run_pytest(pytest_args: list[str]) -> tuple[int, str]:
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "pytest", "-q", "-rfE", "--tb=no",
+           *pytest_args]
+    print("+", " ".join(cmd), flush=True)
+    p = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                       text=True)
+    sys.stdout.write(p.stdout[-8000:])
+    sys.stderr.write(p.stderr[-4000:])
+    return p.returncode, p.stdout
+
+
+def parse_ids(out: str) -> list[str]:
+    ids = []
+    for line in out.splitlines():
+        m = _ID_RE.match(line.strip())
+        if m:
+            ids.append(m.group(2))
+    return sorted(set(ids))
+
+
+def parse_counts(out: str) -> dict:
+    counts = {}
+    for line in out.splitlines():
+        if re.search(r"\d+ (passed|failed|skipped|error)", line):
+            for n, what in re.findall(r"(\d+) (passed|failed|skipped|"
+                                      r"errors?|warnings?)", line):
+                counts[what.rstrip("s")] = int(n)
+    return counts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("pytest_args", nargs="*",
+                    help="extra pytest args (prefix with -- to pass flags)")
+    args = ap.parse_args()
+
+    rc, out = run_pytest(args.pytest_args)
+    if rc not in (0, 1):
+        # 2 = interrupted/collection error, 3 = internal, 4 = usage
+        print(f"\npytest exited {rc} (not a plain pass/fail run) "
+              "— failing the gate", file=sys.stderr)
+        return rc
+    failed = parse_ids(out)
+    counts = parse_counts(out)
+
+    if args.update:
+        payload = {
+            "comment": "Known tier-1 failures the CI gate tolerates; "
+                       "refresh with scripts/check_tier1_baseline.py "
+                       "--update after fixing tests.",
+            "counts": counts,
+            "failed": failed,
+        }
+        with open(args.baseline, "w") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"\nwrote {args.baseline}: {len(failed)} known failures")
+        return 0
+
+    try:
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+    except FileNotFoundError:
+        print(f"\nno baseline at {args.baseline}; run with --update "
+              "first", file=sys.stderr)
+        return 2
+    known = set(baseline.get("failed", ()))
+    new = [t for t in failed if t not in known]
+    fixed = sorted(known - set(failed))
+
+    print(f"\nbaseline gate: {len(failed)} failed "
+          f"({len(known)} known in baseline)")
+    if fixed:
+        # Only informational: a lane that *deselects* tests (e.g. -m
+        # "not multidevice") must not count deselected known failures
+        # as fixed.
+        print(f"  {len(fixed)} baseline entries did not fail this run "
+              "(fixed or deselected)")
+    if new:
+        print(f"\n{len(new)} NEW failure(s) not in the baseline:",
+              file=sys.stderr)
+        for t in new:
+            print(f"  {t}", file=sys.stderr)
+        return 1
+    print("  no new failures — gate PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,29 +1,41 @@
 """Distributed temporal-graph engine (DESIGN.md §2.4).
 
 The paper names parallel snapshot reconstruction (à la Pregel/GBASE) as
-future work; here it is.  Layout:
+future work; here it is, in two layers:
 
-* adjacency rows + node mask sharded over a 1-D ``rows`` mesh axis
-  (over *all* chips: ``pod × data × model`` collapse to one axis for the
-  graph engine),
-* the delta log replicated (it is tiny next to N²) — or time-sharded
-  across pods for range scans,
-* reconstruction is row-parallel (zero communication),
-* global measures psum partial aggregates,
-* batched query serving evaluates hybrid plans on the shard that owns
-  the queried row and combines with psum.
+**Primitives** (bottom half of this file): adjacency rows + node mask
+sharded over a 1-D ``rows`` mesh axis, the delta log replicated (it is
+tiny next to N²), reconstruction row-parallel with zero communication,
+global measures psum partial aggregates.
 
-All functions are shard_map programs over an existing mesh; they make no
-assumption about the device count (tests run them on 8 host devices, the
-production mesh on 512).
+**Sharded group execution** (top half): the engine's batched executor
+(``core.engine.evaluate_many``) groups queries by (plan choice,
+anchor); a group is exactly the unit that is device-parallel, and this
+module turns one group dispatch into one multi-device program:
+
+* hybrid / delta-only groups → ``batch_sharded``: graph + delta
+  replicated, the padded query batch axis split over the mesh.  Each
+  device runs the identical vmapped kernel on its query slice, so
+  results are bit-identical to the single-device path by construction.
+* two-phase groups → ``two_phase_rows``: queries replicated, adjacency
+  rows split; every device runs the LWW delta-apply scatter on its row
+  block only (O(N²/D) work) and contributes integer partial sums that
+  are ``psum``'d into the global measure.  Integer partials make the
+  combination exact, so these also bit-match the single-device path.
+
+All functions are shard_map programs over an existing mesh; they make
+no assumption about the device count (tests run them on 8 forced host
+devices, the production mesh on 512).  With a 1-device mesh the engine
+never routes here — the host-process fallback is the ordinary path.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.6 exposes shard_map at top level
     shard_map = jax.shard_map
@@ -32,25 +44,178 @@ except AttributeError:  # pragma: no cover
 
 from repro.core.delta import ADD_EDGE, Delta
 from repro.core.graph import DenseGraph
+from repro.core.plans import masked_aggregate
 from repro.core.reconstruct import _lww_decide
-
-AXIS = "rows"
-
-
-def graph_mesh(devices=None) -> Mesh:
-    devices = devices if devices is not None else jax.devices()
-    return Mesh(devices, (AXIS,))
+from repro.sharding.graph import (AXIS, batch_specs,  # noqa: F401
+                                  graph_mesh, replicate, shard_rows)
+# graph_mesh / replicate are re-exported: callers historically import
+# them from here.
 
 
 def shard_graph(g: DenseGraph, mesh: Mesh) -> DenseGraph:
     """Place adjacency rows / node mask row-sharded on the mesh."""
-    adj = jax.device_put(g.adj, NamedSharding(mesh, P(AXIS, None)))
-    nodes = jax.device_put(g.nodes, NamedSharding(mesh, P(AXIS)))
-    return DenseGraph(nodes=nodes, adj=adj)
+    return shard_rows(g, mesh)
 
 
-def replicate(x, mesh: Mesh):
-    return jax.device_put(x, NamedSharding(mesh, P()))
+# ---------------------------------------------------------------------------
+# Sharded group execution: batch-axis sharding (hybrid / delta-only)
+# ---------------------------------------------------------------------------
+
+# (mesh, kernel, statics, qmask) -> jitted shard_map program.  Kernels
+# are module-level jitted functions, statics are hashable (name, value)
+# pairs, so the cache key is stable across calls and each program
+# compiles once per padded shape.
+_BATCH_CACHE: dict = {}
+
+
+def batch_sharded(mesh: Mesh, kernel, statics: tuple, args: tuple,
+                  qmask: tuple):
+    """Run ``kernel(*args, **dict(statics))`` with the query-batch axis
+    of the ``qmask``-flagged args split over the mesh.
+
+    Every other arg (graph, delta, scalars) is replicated.  The kernel
+    body is the *same* vmapped program the single-device executor runs,
+    applied to a contiguous slice of the batch, so per-query results
+    are bit-identical; out axis ``P(AXIS)`` re-concatenates slices in
+    order.  Batch length must be a multiple of the device count
+    (``sharding.graph.batch_pad``).
+    """
+    key = (mesh, kernel, statics, qmask)
+    fn = _BATCH_CACHE.get(key)
+    if fn is None:
+        bound = functools.partial(kernel, **dict(statics))
+        fn = jax.jit(shard_map(lambda *a: bound(*a), mesh=mesh,
+                               in_specs=batch_specs(qmask),
+                               out_specs=P(AXIS)))
+        _BATCH_CACHE[key] = fn
+    return fn(*args)
+
+
+# ---------------------------------------------------------------------------
+# Sharded group execution: row-sharded two-phase with psum measures
+# ---------------------------------------------------------------------------
+
+# Measures whose value decomposes into a sum of per-row-block integer
+# partials (finalized identically to the single-device formula after
+# the psum).  Everything else routes through batch_sharded.
+ROW_MEASURES = ("degree", "num_nodes", "num_edges", "density",
+                "avg_degree")
+
+
+def _row_parts(nodes_l, adj_l, v, row0, measure: str):
+    """Integer partial sums of this shard's row block: i32[2] =
+    (node-ish partial, edge partial).  Edge rows count each edge twice
+    across the full mesh — finalization divides by 2, exactly like
+    ``DenseGraph.num_edges``."""
+    i32 = jnp.int32
+    n_loc = adj_l.shape[0]
+    if measure == "degree":
+        lv = v - row0
+        ok = (lv >= 0) & (lv < n_loc)
+        row = adj_l[jnp.clip(lv, 0, n_loc - 1)]
+        deg = jnp.where(ok, jnp.sum(row.astype(i32)), 0)
+        return jnp.stack([deg, jnp.zeros((), i32)])
+    nn = jnp.sum(nodes_l.astype(i32))
+    ee = jnp.sum(adj_l.astype(i32))
+    return jnp.stack([nn, ee])
+
+
+def _row_finalize(tot, measure: str):
+    """Global measure from psum'd partials — the same arithmetic as the
+    single-device measures in ``core.queries`` (exact for integers,
+    identical f32 expression for density/avg_degree)."""
+    if measure == "degree":
+        return tot[..., 0]
+    if measure == "num_nodes":
+        return tot[..., 0]
+    if measure == "num_edges":
+        return tot[..., 1] // 2
+    n = tot[..., 0]
+    e = tot[..., 1] // 2
+    if measure == "density":
+        nf = n.astype(jnp.float32)
+        ef = e.astype(jnp.float32)
+        return jnp.where(nf > 1, 2.0 * ef / (nf * (nf - 1.0)), 0.0)
+    if measure == "avg_degree":
+        nf = jnp.maximum(n, 1).astype(jnp.float32)
+        return 2.0 * e.astype(jnp.float32) / nf
+    raise ValueError(f"measure {measure} is not row-decomposable")
+
+
+_ROW_CACHE: dict = {}
+
+
+def two_phase_rows(mesh: Mesh, anchor: DenseGraph, delta: Delta, t_anchor,
+                   tks, tls, vs, *, kind: str, measure: str, agg: str = "",
+                   num_buckets: int = 0):
+    """One two-phase (plan, anchor) group as a row-parallel program.
+
+    The anchor's rows are split over the mesh (``shard_graph`` layout);
+    the delta and the query arrays are replicated.  Each device
+    LWW-reconstructs only its row block per query time (the row-sharded
+    delta-apply scatter — O(B · N²/D) instead of O(B · N²)) and emits
+    integer partial sums; one psum per group combines them, then the
+    measure is finalized with the single-device formula, so results
+    bit-match ``core.engine.batch_two_phase_*``.
+
+    Supported: kind ∈ {point, diff, agg} × measure ∈ ROW_MEASURES.
+    """
+    key = (mesh, kind, measure, agg, num_buckets)
+    fn = _ROW_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map(
+            functools.partial(_two_phase_rows_local, kind=kind,
+                              measure=measure, agg=agg,
+                              num_buckets=num_buckets),
+            mesh=mesh,
+            in_specs=(P(AXIS), P(AXIS, None), P(), P(), P(), P(), P()),
+            out_specs=P()))
+        _ROW_CACHE[key] = fn
+    return fn(anchor.nodes, anchor.adj, delta, t_anchor, tks, tls, vs)
+
+
+def _two_phase_rows_local(nodes_l, adj_l, delta, t_anchor, tks, tls, vs,
+                          *, kind, measure, agg, num_buckets):
+    row0 = jax.lax.axis_index(AXIS) * adj_l.shape[0]
+
+    def parts_at(base_nodes, base_adj, t_base, t, v):
+        nl, al = _local_lww(base_nodes, base_adj, delta, t_base, t)
+        return _row_parts(nl, al, v, row0, measure), (nl, al)
+
+    if kind == "point":
+        def one(t, v):
+            return parts_at(nodes_l, adj_l, t_anchor, t, v)[0]
+
+        parts = jax.vmap(one)(tks, vs)                       # [B, 2]
+        return _row_finalize(jax.lax.psum(parts, AXIS), measure)
+
+    if kind == "diff":
+        # SG_tl from the anchor, then SG_tk from SG_tl — the same
+        # nearer-snapshot reuse as the single-device diff kernel.
+        def one(tk, tl, v):
+            p_l, (nl, al) = parts_at(nodes_l, adj_l, t_anchor, tl, v)
+            p_k, _ = parts_at(nl, al, tl, tk, v)
+            return p_l, p_k
+
+        p_l, p_k = jax.vmap(one)(tks, tls, vs)               # [B, 2] each
+        a = _row_finalize(jax.lax.psum(p_l, AXIS), measure)
+        b = _row_finalize(jax.lax.psum(p_k, AXIS), measure)
+        return jnp.abs(a - b)
+
+    # agg: one reconstruction per bucket (times past each query's t_l
+    # are computed but masked by masked_aggregate, exactly as in
+    # batch_two_phase_agg).
+    def one(tk, tl, v):
+        ts = tk + jnp.arange(num_buckets, dtype=jnp.int32)
+        return jax.lax.map(
+            lambda t: parts_at(nodes_l, adj_l, t_anchor, t, v)[0], ts)
+
+    parts = jax.vmap(one)(tks, tls, vs)                      # [B, nb, 2]
+    vals = _row_finalize(jax.lax.psum(parts, AXIS), measure)  # [B, nb]
+    return jax.vmap(
+        lambda row, tk, tl: masked_aggregate(row, tl - tk + 1,
+                                             num_buckets, agg))(
+        vals, tks, tls)
 
 
 # ---------------------------------------------------------------------------

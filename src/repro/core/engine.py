@@ -163,6 +163,13 @@ class PlanChoice:
     cost: int = 0             # planner's op-count estimate
 
 
+# Fixed per-program surcharge (op-count equivalents) of launching one
+# multi-device dispatch: collective setup + per-device launch latency.
+# A group is only sharded when the work it *removes* from the critical
+# path exceeds this, so tiny groups stay single-device.
+DISPATCH_OVERHEAD_OPS = 4096
+
+
 class Planner:
     """Cost-based plan selection from delta / index statistics.
 
@@ -171,16 +178,23 @@ class Planner:
     reconstruction (the N² LWW scatter) that the measure-only plans
     avoid.  Degree queries admit all of Table 2; other measures fall
     back to two-phase, as in the paper.
+
+    The planner also owns the *cross-device dispatch* cost term
+    (``shard_mode``): given a (plan, anchor) group and a mesh size it
+    decides whether the group is worth sharding at all, and along
+    which axis (query batch vs adjacency rows).
     """
 
     def __init__(self, selector: AnchorSelector, *, n_cap: int,
                  index: NodeIndex | None = None, node_cap: int = 1024,
-                 selection: Literal["time", "ops"] = "ops"):
+                 selection: Literal["time", "ops"] = "ops",
+                 dispatch_overhead: int = DISPATCH_OVERHEAD_OPS):
         self.selector = selector
         self.n_cap = int(n_cap)
         self.index = index
         self.node_cap = int(node_cap)
         self.selection = selection
+        self.dispatch_overhead = int(dispatch_overhead)
         self._row_ptr_host: np.ndarray | None = None
 
     def _window_ops(self, delta: Delta, t_lo, t_hi) -> int:
@@ -243,6 +257,47 @@ class Planner:
                           windowed=windowed,
                           partial=use_partial and best_plan == "two_phase",
                           cost=best_cost)
+
+    # ------------------------------------------------- cross-device dispatch
+
+    def shard_mode(self, key, b: int, n_dev: int, delta_cap: int,
+                   *, force: bool = False) -> str | None:
+        """How to shard one (plan, anchor) group of ``b`` queries over
+        ``n_dev`` devices: ``"rows"`` (two-phase row-sharded scatter +
+        psum measures), ``"batch"`` (replicate graph, split the query
+        axis), or ``None`` (stay single-device).
+
+        The decision is a cost term: a multi-device program pays a
+        fixed ``dispatch_overhead`` (collective setup + launch), so it
+        only wins when the work moved *off* the critical path —
+        ``group_work · (1 − 1/D)`` — exceeds that overhead.  ``force``
+        skips the threshold (tests, benchmarks) but never makes an
+        unshardable group shardable.
+        """
+        from repro.core.distributed import ROW_MEASURES
+        if n_dev <= 1:
+            return None
+        if key.plan == "two_phase":
+            # Row-sharding needs a row-decomposable measure, an even
+            # row split, and no partial reconstruction (the closure
+            # mask is a full-graph object).
+            if (key.measure in ROW_MEASURES and not key.partial
+                    and self.n_cap % n_dev == 0):
+                # one dense LWW scatter per query (agg kinds do one per
+                # bucket — strictly more, so the bound is conservative)
+                work = b * (self.n_cap ** 2 // 64)
+                if force or work - work // n_dev > self.dispatch_overhead:
+                    return "rows"
+            # fall through: a two-phase group is still batch-shardable
+            # (each device reconstructs dense, but only for its own
+            # queries).
+        if b < n_dev and not force:
+            return None
+        # per-query kernel work is dominated by the masked log scan
+        work = b * max(delta_cap, self.n_cap)
+        if force or work - work // n_dev > self.dispatch_overhead:
+            return "batch"
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -458,7 +513,8 @@ class HistoricalQueryEngine:
                  mat_snapshots: Sequence[DenseGraph] = (),
                  index: NodeIndex | None = None, node_cap: int = 1024,
                  selection: Literal["time", "ops"] = "ops",
-                 passes: int = 2, series_budget: int = 1 << 24):
+                 passes: int = 2, series_budget: int = 1 << 24,
+                 mesh=None):
         self.current = current
         self.delta = delta
         self.t_cur = int(t_cur)
@@ -468,6 +524,15 @@ class HistoricalQueryEngine:
         # max elements of the shared all-nodes degree series a single
         # agg group may materialize (i32; 1<<24 ≈ 64 MB)
         self.series_budget = int(series_budget)
+        # Serving mesh (None → single-device).  Snapshot/delta arrays
+        # are placed on it lazily per role (replicated for batch-axis
+        # groups, row-sharded per anchor for two-phase groups) and
+        # cached, so steady-state serving does no host→device copies.
+        self.mesh = mesh
+        self._placed_rep: dict = {}     # (mesh, role) -> replicated tree
+        self._placed_rows: dict = {}    # (mesh, anchor_id) -> row-sharded
+        # Per-call instrumentation: [(group key, batch, shard mode)].
+        self.last_group_stats: list = []
         # One host copy of the sorted timestamps: all per-query costing
         # (anchor selection + plan choice) runs sync-free on it.
         self.t_host = np.asarray(delta.t)
@@ -481,12 +546,33 @@ class HistoricalQueryEngine:
     @classmethod
     def from_store(cls, store, *, indexed: bool = False,
                    node_cap: int = 1024,
-                   selection: Literal["time", "ops"] = "ops"):
+                   selection: Literal["time", "ops"] = "ops",
+                   mesh=None):
         return cls(store.current, store.delta(), store.t_cur,
                    mat_times=store.materialized.times,
                    mat_snapshots=store.materialized.snapshots,
                    index=store.node_index() if indexed else None,
-                   node_cap=node_cap, selection=selection)
+                   node_cap=node_cap, selection=selection, mesh=mesh)
+
+    # --------------------------------------------------- device placement
+
+    def _replicated(self, mesh, role: str, tree):
+        """Cache a fully-replicated placement of ``tree`` on ``mesh``
+        (graph/delta/index operands of batch-axis-sharded groups)."""
+        key = (mesh, role)
+        if key not in self._placed_rep:
+            from repro.sharding.graph import replicate
+            self._placed_rep[key] = replicate(tree, mesh)
+        return self._placed_rep[key]
+
+    def _row_sharded_anchor(self, mesh, anchor_id: int):
+        """Cache the row-sharded placement of one anchor snapshot."""
+        key = (mesh, anchor_id)
+        if key not in self._placed_rows:
+            from repro.core.distributed import shard_graph
+            _, g = self.selector.get(anchor_id)
+            self._placed_rows[key] = shard_graph(g, mesh)
+        return self._placed_rows[key]
 
     # ------------------------------------------------------------- planning
 
@@ -553,12 +639,41 @@ class HistoricalQueryEngine:
             return self.delta
         return gather_window(self.delta, t_lo, t_hi, cap)
 
-    def _run_group(self, key: _GroupKey, qs: list[Query]):
+    def _shard_mode(self, key: _GroupKey, b: int, mesh,
+                    shard: str) -> str | None:
+        """Group-level sharding decision (host fallback on 1 device)."""
+        if mesh is None or shard == "never":
+            return None
+        from repro.sharding.graph import mesh_size, single_device
+        if single_device(mesh):
+            return None
+        return self.planner.shard_mode(key, b, mesh_size(mesh),
+                                       self.delta.capacity,
+                                       force=(shard == "force"))
+
+    def _run_group(self, key: _GroupKey, qs: list[Query], mesh=None,
+                   shard: str = "auto"):
         """Dispatch one group as a single device program; returns the
         (padded) device array — callers slice to len(qs) after one
-        batch-wide ``device_get``, so group dispatches overlap."""
+        batch-wide ``device_get``, so group dispatches overlap.
+
+        With a multi-device ``mesh``, the group may run as one sharded
+        program (``core.distributed``): the planner's dispatch cost
+        term picks the axis — query batch for hybrid/delta-only (and
+        non-decomposable two-phase), adjacency rows for two-phase with
+        psum-combinable measures.  Either way the padded device array
+        that comes back holds bit-identical per-query values.
+        """
         b = len(qs)
-        pad = _pow2(b) - b
+        mode = self._shard_mode(key, b, mesh, shard)
+        if mode is not None:
+            from repro.sharding.graph import batch_pad, mesh_size
+            padded = (batch_pad(b, mesh_size(mesh)) if mode == "batch"
+                      else _pow2(b))
+        else:
+            padded = _pow2(b)
+        self.last_group_stats.append((key, b, mode))
+        pad = padded - b
         tks = np.asarray([q.t_k for q in qs] + [qs[-1].t_k] * pad,
                          np.int32)
         last_tl = qs[-1].t_l if qs[-1].t_l is not None else qs[-1].t_k
@@ -569,30 +684,50 @@ class HistoricalQueryEngine:
                         + [last_v] * pad, np.int32)
         tks_d, tls_d, vs_d = map(jnp.asarray, (tks, tls, vs))
 
+        # Replicated operand placement for batch-axis sharded groups
+        # (cached on the engine; plain single-device arrays otherwise).
+        if mode == "batch":
+            cur = self._replicated(mesh, "current", self.current)
+            dlt = self._replicated(mesh, "delta", self.delta)
+            idx = (self._replicated(mesh, "index", self.index)
+                   if self.index is not None else None)
+        else:
+            cur, dlt, idx = self.current, self.delta, self.index
+
+        # Build one dispatch descriptor: (kernel, static kwargs,
+        # positional args, query-axis mask).  The same descriptor runs
+        # locally or under shard_map — the kernel body is identical.
         if key.plan == "delta_only":
             if key.indexed:
-                out = batch_delta_only_diff_indexed(
-                    self.delta, self.index, vs_d, tks_d, tls_d,
-                    self.node_cap)
+                desc = (batch_delta_only_diff_indexed,
+                        (("cap", self.node_cap),),
+                        (dlt, idx, vs_d, tks_d, tls_d),
+                        (0, 0, 1, 1, 1))
             else:
-                out = batch_delta_only_diff(self.delta, vs_d, tks_d, tls_d)
+                desc = (batch_delta_only_diff, (),
+                        (dlt, vs_d, tks_d, tls_d), (0, 1, 1, 1))
         elif key.plan == "hybrid":
             if key.kind == "point":
                 if key.indexed:
-                    out = batch_hybrid_point_indexed(
-                        self.current, self.delta, self.index, vs_d, tks_d,
-                        self.t_cur, self.node_cap)
+                    desc = (batch_hybrid_point_indexed,
+                            (("cap", self.node_cap),),
+                            (cur, dlt, idx, vs_d, tks_d, self.t_cur),
+                            (0, 0, 0, 1, 1, 0))
                 else:
-                    out = batch_hybrid_point(self.current, self.delta,
-                                             vs_d, tks_d, self.t_cur)
+                    desc = (batch_hybrid_point, (),
+                            (cur, dlt, vs_d, tks_d, self.t_cur),
+                            (0, 0, 1, 1, 0))
             elif key.kind == "diff":
                 if key.indexed:
-                    out = batch_hybrid_diff_indexed(
-                        self.current, self.delta, self.index, vs_d, tks_d,
-                        tls_d, self.t_cur, self.node_cap)
+                    desc = (batch_hybrid_diff_indexed,
+                            (("cap", self.node_cap),),
+                            (cur, dlt, idx, vs_d, tks_d, tls_d,
+                             self.t_cur),
+                            (0, 0, 0, 1, 1, 1, 0))
                 else:
-                    out = batch_hybrid_diff(self.current, self.delta,
-                                            vs_d, tks_d, tls_d, self.t_cur)
+                    desc = (batch_hybrid_diff, (),
+                            (cur, dlt, vs_d, tks_d, tls_d, self.t_cur),
+                            (0, 0, 1, 1, 1, 0))
             else:  # agg
                 # Shared series covers the union window [t0, max t_l];
                 # per-query values past each query's own t_l are masked
@@ -606,44 +741,78 @@ class HistoricalQueryEngine:
                     # one temporally-distant query would inflate the
                     # shared series to O(w_total · n_cap); fall back to
                     # per-node series (identical values, no n_cap term)
-                    out = batch_hybrid_agg_per_node(
-                        self.current, self.delta, vs_d, tks_d, tls_d,
-                        w_q, key.agg)
+                    desc = (batch_hybrid_agg_per_node,
+                            (("w_q", w_q), ("agg", key.agg)),
+                            (cur, dlt, vs_d, tks_d, tls_d),
+                            (0, 0, 1, 1, 1))
                 else:
-                    out = batch_hybrid_agg(self.current, self.delta,
-                                           vs_d, tks_d, tls_d, t0,
-                                           self.t_cur, w_total, w_q,
-                                           key.agg)
+                    desc = (batch_hybrid_agg,
+                            (("w_total", w_total), ("w_q", w_q),
+                             ("agg", key.agg)),
+                            (cur, dlt, vs_d, tks_d, tls_d, t0,
+                             self.t_cur),
+                            (0, 0, 1, 1, 1, 0, 0))
         else:  # two_phase
             t_anchor, g_anchor = self.selector.get(key.anchor_id)
             d = self._group_delta(
                 key, t_anchor,
                 np.concatenate([tks, tls]) if key.kind != "point" else tks)
-            if key.kind == "point":
-                out = batch_two_phase_point(
-                    g_anchor, d, t_anchor, tks_d, vs_d,
-                    measure=key.measure, scope=key.scope,
-                    use_partial=key.partial, passes=self.passes)
-            elif key.kind == "diff":
-                out = batch_two_phase_diff(
-                    g_anchor, d, t_anchor, tks_d, tls_d, vs_d,
-                    measure=key.measure, scope=key.scope,
-                    use_partial=key.partial, passes=self.passes)
-            else:
+            nb = 0
+            if key.kind == "agg":
                 nb = _pow2(max(int(tl - tk) + 1
                                for tk, tl in zip(tks[:b], tls[:b])))
-                out = batch_two_phase_agg(
-                    g_anchor, d, t_anchor, tks_d, tls_d, vs_d,
-                    measure=key.measure, scope=key.scope,
-                    num_buckets=nb, agg=key.agg,
-                    use_partial=key.partial, passes=self.passes)
-        return out
+            if mode == "rows":
+                from repro.core import distributed as D
+                anchor_rows = self._row_sharded_anchor(mesh, key.anchor_id)
+                if d is self.delta:
+                    d = self._replicated(mesh, "delta", self.delta)
+                return D.two_phase_rows(
+                    mesh, anchor_rows, d, t_anchor, tks_d, tls_d, vs_d,
+                    kind=key.kind, measure=key.measure, agg=key.agg,
+                    num_buckets=nb)
+            if mode == "batch":
+                # anchor -1 IS the current snapshot — share its cached
+                # placement instead of replicating the N² array twice
+                role = ("current" if key.anchor_id == -1
+                        else ("anchor", key.anchor_id))
+                g_anchor = self._replicated(mesh, role, g_anchor)
+                if d is self.delta:
+                    d = self._replicated(mesh, "delta", self.delta)
+            if key.kind == "point":
+                desc = (batch_two_phase_point,
+                        (("measure", key.measure), ("scope", key.scope),
+                         ("use_partial", key.partial),
+                         ("passes", self.passes)),
+                        (g_anchor, d, t_anchor, tks_d, vs_d),
+                        (0, 0, 0, 1, 1))
+            elif key.kind == "diff":
+                desc = (batch_two_phase_diff,
+                        (("measure", key.measure), ("scope", key.scope),
+                         ("use_partial", key.partial),
+                         ("passes", self.passes)),
+                        (g_anchor, d, t_anchor, tks_d, tls_d, vs_d),
+                        (0, 0, 0, 1, 1, 1))
+            else:
+                desc = (batch_two_phase_agg,
+                        (("measure", key.measure), ("scope", key.scope),
+                         ("num_buckets", nb), ("agg", key.agg),
+                         ("use_partial", key.partial),
+                         ("passes", self.passes)),
+                        (g_anchor, d, t_anchor, tks_d, tls_d, vs_d),
+                        (0, 0, 0, 1, 1, 1))
+
+        kernel, statics, args, qmask = desc
+        if mode == "batch":
+            from repro.core import distributed as D
+            return D.batch_sharded(mesh, kernel, statics, args, qmask)
+        return kernel(*args, **dict(statics))
 
     def evaluate_many(self, queries: Sequence[Query], plan: str = "auto",
                       *, indexed: bool | None = None,
                       partial_rows: bool | None = None,
                       windowed: bool | None = None,
-                      return_choices: bool = False):
+                      return_choices: bool = False,
+                      mesh=None, shard: str = "auto"):
         """Evaluate B historical queries, grouped by (plan, anchor) and
         executed as one device program per group.
 
@@ -652,7 +821,16 @@ class HistoricalQueryEngine:
         ``plans.evaluate``); the default lets the cost model decide per
         query.  Returns a list of scalars in query order (and the
         per-query ``PlanChoice`` list when ``return_choices``).
+
+        ``mesh`` (default: the engine's construction-time mesh) turns
+        each large-enough group into one multi-device program —
+        ``shard`` is ``"auto"`` (planner cost term decides per group),
+        ``"force"`` (shard every shardable group) or ``"never"``.
+        Sharded and single-device execution return bit-identical
+        results; with one visible device the mesh is ignored (host
+        fallback).
         """
+        mesh = mesh if mesh is not None else self.mesh
         choices = [self._resolve(q, plan, indexed, partial_rows, windowed)
                    for q in queries]
         groups: dict[_GroupKey, list[int]] = {}
@@ -660,7 +838,9 @@ class HistoricalQueryEngine:
             groups.setdefault(self._group_key(q, c), []).append(i)
         # Dispatch every group first (async), then fetch everything with
         # one device_get so transfers don't serialize the group programs.
-        outs = [(idxs, self._run_group(key, [queries[i] for i in idxs]))
+        self.last_group_stats = []
+        outs = [(idxs, self._run_group(key, [queries[i] for i in idxs],
+                                       mesh=mesh, shard=shard))
                 for key, idxs in groups.items()]
         fetched = jax.device_get([o for _, o in outs])
         results: list = [None] * len(queries)

@@ -270,22 +270,50 @@ class TemporalGraphStore:
         return reconstruct_dense(g_a, delta, t_a, t)
 
     def engine(self, *, indexed: bool = False,
-               node_cap: int = 1024) -> HistoricalQueryEngine:
+               node_cap: int = 1024, mesh=None) -> HistoricalQueryEngine:
         """The unified historical-query engine over the current store
         state (cached; invalidated by ingest/advance, by a change to
-        the materialized-snapshot set, by a different ``node_cap``, or
-        by asking for an index the cached engine lacks.  An engine
-        built with an index keeps it for later unindexed calls — the
-        planner simply has more statistics available)."""
+        the materialized-snapshot set, by a different ``node_cap`` or
+        ``mesh``, or by asking for an index the cached engine lacks.
+        An engine built with an index keeps it for later unindexed
+        calls — the planner simply has more statistics available.
+
+        ``mesh`` (a 1-D ``sharding.graph.graph_mesh``) makes the engine
+        a multi-device serving engine: snapshot/delta arrays are placed
+        on the mesh (replicated delta, row-sharded or replicated
+        snapshot per group role) and big query groups run as one
+        sharded program each (``core.distributed``).  ``mesh=None``
+        means "don't care": a cached mesh-bound engine is reused (its
+        device placements are expensive; sharded results are
+        bit-identical anyway) — only a *different* mesh rebuilds."""
         e = self._engine_cache
         if (e is None or (indexed and e.index is None)
                 or e.node_cap != node_cap
+                or (mesh is not None and e.mesh != mesh)
                 or e.selector.times != self.materialized.times):
             keep_index = indexed or (e is not None and e.index is not None)
+            keep_mesh = mesh if mesh is not None else (
+                e.mesh if e is not None else None)
             e = HistoricalQueryEngine.from_store(
-                self, indexed=keep_index, node_cap=node_cap)
+                self, indexed=keep_index, node_cap=node_cap,
+                mesh=keep_mesh)
             self._engine_cache = e
         return e
+
+    def place_on_mesh(self, mesh) -> HistoricalQueryEngine:
+        """Eagerly place the store's device state for multi-device
+        serving: the interval delta replicated and the current snapshot
+        both replicated (batch-axis groups) and row-sharded (two-phase
+        groups), so the first queries pay no placement transfers.
+        Returns the mesh-bound engine (also cached as ``engine()``)."""
+        eng = self.engine(mesh=mesh)
+        from repro.sharding.graph import rows_divisible, single_device
+        if not single_device(mesh):
+            eng._replicated(mesh, "delta", eng.delta)
+            eng._replicated(mesh, "current", eng.current)
+            if rows_divisible(self.n_cap, mesh):
+                eng._row_sharded_anchor(mesh, -1)
+        return eng
 
     def query(self, q: Query, plan: str = "auto", indexed: bool = False,
               **kw):
@@ -300,10 +328,12 @@ class TemporalGraphStore:
                         index=index, plan=plan, **kw)
 
     def evaluate_many(self, queries, plan: str = "auto", *,
-                      indexed: bool = False, **kw):
+                      indexed: bool = False, mesh=None, **kw):
         """Batched multi-query serving: route through the engine's
-        grouped executor (one device program per (plan, anchor) group)."""
-        return self.engine(indexed=indexed).evaluate_many(
+        grouped executor (one device program per (plan, anchor) group;
+        one *sharded* program per big group when ``mesh`` spans more
+        than one device)."""
+        return self.engine(indexed=indexed, mesh=mesh).evaluate_many(
             queries, plan, indexed=True if indexed else None, **kw)
 
     # stats used by benchmarks (paper Table 3)

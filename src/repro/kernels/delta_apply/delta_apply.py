@@ -54,22 +54,23 @@ def delta_apply_tiles(anchor_adj: jax.Array, tile_ops: jax.Array,
                       interpret: bool = True) -> jax.Array:
     """Apply pre-bucketed tile op lists to the adjacency.
 
-    anchor_adj: i32[N, N] (0/1)  — N a multiple of ``tile``
+    anchor_adj: i32[R, C] (0/1) — both dims multiples of ``tile``.
+    R == C for a full snapshot; R < C for one row shard of a
+    row-sharded mesh (ops.bucket_ops builds the matching blocks).
     tile_ops:   i32[Tr, Tc, cap, 4] — per-tile [lu, lv, value, valid]
-    returns:    i32[N, N]
+    returns:    i32[R, C]
     """
-    n = anchor_adj.shape[0]
-    assert n % tile == 0, (n, tile)
-    tr = n // tile
-    grid = (tr, tr)
+    r, c = anchor_adj.shape
+    assert r % tile == 0 and c % tile == 0, (r, c, tile)
+    grid = (r // tile, c // tile)
     return pl.pallas_call(
         functools.partial(_kernel, cap=cap),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, cap, 4), lambda r, c: (r, c, 0, 0)),
-            pl.BlockSpec((tile, tile), lambda r, c: (r, c)),
+            pl.BlockSpec((1, 1, cap, 4), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((tile, tile), lambda r, c: (r, c)),
-        out_shape=jax.ShapeDtypeStruct((n, n), jnp.int32),
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
         interpret=interpret,
     )(tile_ops, anchor_adj)

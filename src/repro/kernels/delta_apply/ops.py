@@ -13,18 +13,35 @@ from repro.core.graph import DenseGraph
 from repro.kernels.delta_apply.delta_apply import delta_apply_tiles
 
 
-@functools.partial(jax.jit, static_argnames=("n", "tile", "cap", "forward"))
+@functools.partial(jax.jit, static_argnames=("n", "tile", "cap", "forward",
+                                             "n_rows", "row0",
+                                             "n_valid_rows"))
 def bucket_ops(delta: Delta, n: int, t_lo, t_hi, tile: int, cap: int,
-               forward: bool):
+               forward: bool, n_rows: int | None = None, row0: int = 0,
+               n_valid_rows: int | None = None):
     """Build the dense per-tile op blocks i32[Tr, Tc, cap, 4].
 
     Every in-window edge op contributes two entries ((u,v) and (v,u)).
     Entries are ordered so sequential overwrite == last-writer-wins:
     ascending time for forward, descending for backward.  Per-tile
     overflow beyond ``cap`` is detected and returned as a flag.
+
+    ``n_rows``/``row0`` make the bucketing *shard-safe*: a device that
+    owns only adjacency rows [row0, row0 + n_rows) buckets exactly the
+    entries landing in its row block (columns stay global), with its
+    own tile padding — so per-shard blocks concatenate to the full
+    grid and the kernel runs unchanged on one row shard.
+    ``n_valid_rows`` (default ``n_rows``) caps the *kept* rows below
+    the tile-padded count, so ops owned by the next shard never leak
+    into this shard's pad band (they would waste cap slots and trip a
+    spurious overflow).
     """
     m = delta.capacity
-    tr = n // tile
+    n_rows = n if n_rows is None else n_rows
+    n_valid_rows = n_rows if n_valid_rows is None else n_valid_rows
+    tr = n_rows // tile
+    tc = n // tile
+    nt = tr * tc
     in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
     e = in_win & delta.is_edge_op()
     val = (delta.op == (ADD_EDGE if forward else REM_EDGE)).astype(jnp.int32)
@@ -37,7 +54,10 @@ def bucket_ops(delta: Delta, n: int, t_lo, t_hi, tile: int, cap: int,
     if not forward:
         order_rank = (m - 1) - order_rank  # descending time
 
-    tile_id = jnp.where(ee, (us // tile) * tr + (vs // tile), tr * tr)
+    lr = us - row0                       # row local to this shard
+    ee = ee & (lr >= 0) & (lr < n_valid_rows)
+    lr = jnp.clip(lr, 0, max(n_rows - 1, 0))
+    tile_id = jnp.where(ee, (lr // tile) * tc + (vs // tile), nt)
     # sort by (tile, rank): stable two-pass — first by rank, then by tile
     o1 = jnp.argsort(order_rank, stable=True)
     t1 = tile_id[o1]
@@ -45,48 +65,36 @@ def bucket_ops(delta: Delta, n: int, t_lo, t_hi, tile: int, cap: int,
     perm = o1[o2]
     tid_s = tile_id[perm]
     # position of each entry within its tile bucket
-    seg_start = jnp.searchsorted(tid_s, jnp.arange(tr * tr + 1))
+    seg_start = jnp.searchsorted(tid_s, jnp.arange(nt + 1))
     pos = jnp.arange(2 * m) - seg_start[tid_s]
-    overflow = jnp.any((pos >= cap) & (tid_s < tr * tr))
+    overflow = jnp.any((pos >= cap) & (tid_s < nt))
 
-    dst_t = jnp.where(tid_s < tr * tr, tid_s, tr * tr)
+    dst_t = jnp.where(tid_s < nt, tid_s, nt)
     dst_p = jnp.clip(pos, 0, cap - 1)
-    entries = jnp.stack([us[perm] % tile, vs[perm] % tile, vals[perm],
+    entries = jnp.stack([lr[perm] % tile, vs[perm] % tile, vals[perm],
                          jnp.ones_like(dst_p)], axis=1)
-    blocks = jnp.zeros((tr * tr + 1, cap, 4), jnp.int32)
-    keep = (tid_s < tr * tr) & (pos < cap)
-    blocks = blocks.at[jnp.where(keep, dst_t, tr * tr),
+    blocks = jnp.zeros((nt + 1, cap, 4), jnp.int32)
+    keep = (tid_s < nt) & (pos < cap)
+    blocks = blocks.at[jnp.where(keep, dst_t, nt),
                        dst_p].set(jnp.where(keep[:, None], entries, 0))
-    return blocks[:tr * tr].reshape(tr, tr, cap, 4), overflow
+    return blocks[:nt].reshape(tr, tc, cap, 4), overflow
 
 
-def delta_apply(anchor: DenseGraph, delta: Delta, t_anchor: int,
-                t_query: int, tile: int = 256, cap: int = 1024,
-                interpret: bool = True) -> DenseGraph:
-    """Kernel-backed reconstruct_at for DenseGraph (edge part on the
-    Pallas kernel, node mask via XLA scatter)."""
-    n = anchor.n_cap
-    pad = (-n) % tile
-    forward = bool(t_query >= t_anchor)
-    t_lo, t_hi = min(t_anchor, t_query), max(t_anchor, t_query)
-
-    adj = anchor.adj.astype(jnp.int32)
-    if pad:
-        adj = jnp.pad(adj, ((0, pad), (0, pad)))
-    blocks, overflow = bucket_ops(delta, n + pad, t_lo, t_hi, tile, cap,
-                                  forward)
-    out = delta_apply_tiles(adj, blocks, tile=tile, cap=cap,
-                            interpret=interpret)
-    adj_new = out[:n, :n].astype(bool)
-
-    # node mask: same LWW on the XLA path (N-sized, negligible)
+def _node_mask_lww(nodes, delta: Delta, t_lo, t_hi, forward: bool,
+                   row0: int = 0):
+    """LWW node-mask update for rows [row0, row0 + len(nodes)) — the
+    XLA path (N-sized, negligible next to the N² edge part)."""
+    n_rows = nodes.shape[0]
     m = delta.capacity
     idx = jnp.arange(m, dtype=jnp.int32)
     in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
     nwin = in_win & delta.is_node_op()
-    first = jnp.full((n,), m, jnp.int32).at[delta.u].min(
+    lu = delta.u - row0
+    nwin = nwin & (lu >= 0) & (lu < n_rows)
+    lu = jnp.clip(lu, 0, n_rows - 1)
+    first = jnp.full((n_rows,), m, jnp.int32).at[lu].min(
         jnp.where(nwin, idx, m))
-    last = jnp.full((n,), -1, jnp.int32).at[delta.u].max(
+    last = jnp.full((n_rows,), -1, jnp.int32).at[lu].max(
         jnp.where(nwin, idx, -1))
     if forward:
         dec = last >= 0
@@ -94,5 +102,46 @@ def delta_apply(anchor: DenseGraph, delta: Delta, t_anchor: int,
     else:
         dec = first < m
         val = delta.op[jnp.clip(first, None, m - 1)] != ADD_NODE
-    nodes = jnp.where(dec, val, anchor.nodes)
+    return jnp.where(dec, val, nodes)
+
+
+def delta_apply_row_block(nodes_block: jnp.ndarray, adj_block: jnp.ndarray,
+                          delta: Delta, t_anchor: int, t_query: int,
+                          row0: int, tile: int = 256, cap: int = 1024,
+                          interpret: bool = True):
+    """Kernel-backed LWW reconstruction of one adjacency *row block*
+    (shard-safe: this is what each device of a row-sharded mesh runs).
+
+    ``adj_block`` is bool[R, N] — rows [row0, row0 + R) of the global
+    adjacency, columns global.  Row/column padding to the tile size is
+    applied per block, so any shard width that divides into tiles (or
+    pads up to one) works without touching other shards' rows.
+    """
+    n_rows, n_cols = adj_block.shape
+    pad_r = (-n_rows) % tile
+    pad_c = (-n_cols) % tile
+    forward = bool(t_query >= t_anchor)
+    t_lo, t_hi = min(t_anchor, t_query), max(t_anchor, t_query)
+
+    adj = adj_block.astype(jnp.int32)
+    if pad_r or pad_c:
+        adj = jnp.pad(adj, ((0, pad_r), (0, pad_c)))
+    blocks, overflow = bucket_ops(delta, n_cols + pad_c, t_lo, t_hi, tile,
+                                  cap, forward, n_rows=n_rows + pad_r,
+                                  row0=row0, n_valid_rows=n_rows)
+    out = delta_apply_tiles(adj, blocks, tile=tile, cap=cap,
+                            interpret=interpret)
+    adj_new = out[:n_rows, :n_cols].astype(bool)
+    nodes = _node_mask_lww(nodes_block, delta, t_lo, t_hi, forward, row0)
+    return nodes, adj_new, overflow
+
+
+def delta_apply(anchor: DenseGraph, delta: Delta, t_anchor: int,
+                t_query: int, tile: int = 256, cap: int = 1024,
+                interpret: bool = True) -> DenseGraph:
+    """Kernel-backed reconstruct_at for DenseGraph (edge part on the
+    Pallas kernel, node mask via XLA scatter)."""
+    nodes, adj_new, overflow = delta_apply_row_block(
+        anchor.nodes, anchor.adj, delta, t_anchor, t_query, 0,
+        tile=tile, cap=cap, interpret=interpret)
     return DenseGraph(nodes=nodes, adj=adj_new), overflow

@@ -1,0 +1,81 @@
+"""Mesh/axis helpers for the distributed graph engine.
+
+The graph engine uses ONE 1-D mesh whose single axis plays a different
+role per (plan, anchor) group (core/distributed.py):
+
+* hybrid / delta-only groups — the axis shards the *padded query batch*
+  (graph + delta replicated, queries split),
+* two-phase groups — the axis shards the *adjacency rows* (queries
+  replicated, the LWW scatter row-parallel, measures psum'd).
+
+The axis is named ``rows`` for historical reasons (the row-parallel
+reconstruction primitives predate query sharding); it is the only axis
+the graph engine ever uses, unlike the LM-side (pod, data, model)
+meshes of ``repro.sharding``.
+
+Everything here is host-side plumbing: mesh construction, batch
+padding arithmetic, and snapshot/delta device placement.  Placement is
+an optimization, not a requirement — ``jit``-of-``shard_map`` reshards
+automatically; pre-placing just avoids a host→device transfer per
+dispatch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AXIS = "rows"
+
+
+def graph_mesh(devices=None) -> Mesh:
+    """The 1-D graph-engine mesh over all (or the given) devices."""
+    devices = devices if devices is not None else jax.devices()
+    return Mesh(np.asarray(devices), (AXIS,))
+
+
+def mesh_size(mesh: Mesh | None) -> int:
+    return 1 if mesh is None else int(np.prod(list(mesh.shape.values())))
+
+
+def single_device(mesh: Mesh | None) -> bool:
+    """True when there is nothing to shard over — the host-process
+    fallback: run the ordinary single-device path."""
+    return mesh_size(mesh) <= 1
+
+
+def batch_pad(b: int, n_dev: int) -> int:
+    """Padded batch size: per-device slice rounded to a power of two
+    (bounds recompiles exactly like the single-device executor), times
+    the device count (so the batch axis divides evenly)."""
+    per = max(1, int(np.ceil(b / max(n_dev, 1))))
+    per = 1 << int(np.ceil(np.log2(per)))
+    return per * n_dev
+
+
+def rows_divisible(n_cap: int, mesh: Mesh | None) -> bool:
+    """Row-sharding needs the node capacity to split evenly."""
+    return mesh is not None and n_cap % mesh_size(mesh) == 0
+
+
+def replicate(tree, mesh: Mesh):
+    """Place a pytree fully replicated on the mesh."""
+    return jax.device_put(tree, NamedSharding(mesh, P()))
+
+
+def shard_rows(tree, mesh: Mesh):
+    """Place a pytree with the leading axis of every leaf sharded over
+    the mesh (node mask i1[N], adjacency i1[N, N], degree i32[N]...)."""
+
+    def put(x):
+        spec = P(AXIS, *([None] * (np.ndim(x) - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree)
+
+
+def batch_specs(qmask) -> tuple:
+    """in_specs for a batched kernel call: P(AXIS) for query-batch
+    arguments, P() (replicated) for everything else."""
+    return tuple(P(AXIS) if q else P() for q in qmask)

@@ -2,8 +2,12 @@ import os
 import sys
 
 # Tests must see ONE device (the dry-run sets 512 only inside its own
-# process). Make sure no flag leaks in from the environment.
-os.environ.pop("XLA_FLAGS", None)
+# process). Make sure no flag leaks in from the environment — but stash
+# it so the multidevice subprocess tests can inherit the CI lane's
+# forced device count (see tests/test_distributed.py).
+_flags = os.environ.pop("XLA_FLAGS", None)
+if _flags:
+    os.environ.setdefault("REPRO_CI_XLA_FLAGS", _flags)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))

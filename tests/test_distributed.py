@@ -1,19 +1,32 @@
 """Distributed engine + dry-run machinery on 8 forced host devices.
 
 Device count is locked at first jax init, so these run in a
-subprocess with XLA_FLAGS set (tests themselves keep 1 device)."""
+subprocess with XLA_FLAGS set (tests themselves keep 1 device).  The
+flag is inherited from the environment when it already forces a host
+device count (the CI multidevice lane exports it), so the workflow's
+XLA_FLAGS is what the subprocesses actually run under."""
 import os
 import subprocess
 import sys
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _xla_flags() -> str:
+    for var in ("XLA_FLAGS", "REPRO_CI_XLA_FLAGS"):
+        flags = os.environ.get(var, "")
+        if "xla_force_host_platform_device_count" in flags:
+            return flags
+    return "--xla_force_host_platform_device_count=8"
 
 
 def _run(code: str, timeout=900):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = _xla_flags()
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=timeout)
@@ -21,11 +34,125 @@ def _run(code: str, timeout=900):
     return r.stdout
 
 
-@pytest.mark.slow
 def test_distributed_graph_engine():
     out = _run(open(os.path.join(ROOT, "scripts",
                                  "smoke_dist.py")).read())
     assert "distributed smoke OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Sharded evaluate_many: bit-parity with the single-device executor
+# ---------------------------------------------------------------------------
+
+_PARITY_PRELUDE = """
+import numpy as np, jax
+from repro.core.generate import EvolutionParams, build_store
+from repro.core.plans import Query
+from repro.sharding.graph import graph_mesh
+
+store = build_store(96, EvolutionParams(m_attach=3, lam_extra=1.0,
+                                        lam_remove=1.5,
+                                        p_remove_node=0.03), seed=11)
+tc = store.t_cur
+mesh = graph_mesh()
+assert len(jax.devices()) == 8, jax.devices()
+eng = store.place_on_mesh(mesh)
+
+def vals(rs):
+    return [np.asarray(r).item() for r in rs]
+"""
+
+
+def test_sharded_evaluate_many_bit_parity_all_plans():
+    """Forced {two_phase, delta_only, hybrid} groups, every query kind,
+    node + global scopes: the sharded result must equal the
+    single-device result bit for bit, and the sharded modes must
+    actually engage (no silent fallback)."""
+    code = _PARITY_PRELUDE + """
+qs = [
+    Query("point", "node", "degree", t_k=tc // 3, v=5),
+    Query("diff", "node", "degree", t_k=tc // 4, t_l=3 * tc // 4, v=9),
+    Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 6, v=3,
+          agg="mean"),
+    Query("agg", "node", "degree", t_k=tc // 2, t_l=tc // 2 + 6, v=3,
+          agg="min"),
+    Query("point", "global", "num_edges", t_k=tc // 2),
+    Query("point", "global", "num_nodes", t_k=tc // 2),
+    Query("point", "global", "density", t_k=tc // 2),
+    Query("diff", "global", "num_edges", t_k=tc // 4, t_l=3 * tc // 4),
+    Query("agg", "global", "num_edges", t_k=tc // 2, t_l=tc // 2 + 4,
+          agg="max"),
+    Query("point", "node", "neighborhood2", t_k=tc // 3, v=5),
+] * 3
+# the engine is mesh-bound, so references must pin shard="never" to
+# really exercise the single-device path
+ref = vals(eng.evaluate_many(qs, plan="two_phase", shard="never"))
+assert all(m is None for *_, m in eng.last_group_stats)
+got = vals(eng.evaluate_many(qs, plan="two_phase", mesh=mesh,
+                             shard="force"))
+assert got == ref, [p for p in zip(got, ref) if p[0] != p[1]]
+modes = {m for *_, m in eng.last_group_stats}
+assert "rows" in modes and None not in modes, eng.last_group_stats
+
+deg = [q for q in qs if q.scope == "node" and q.measure == "degree"]
+diffs = [q for q in deg if q.kind == "diff"]
+for plan, sub in (("hybrid", deg), ("delta_only", diffs)):
+    ref = vals(eng.evaluate_many(sub, plan=plan, shard="never"))
+    got = vals(eng.evaluate_many(sub, plan=plan, mesh=mesh, shard="force"))
+    assert got == ref, (plan, list(zip(got, ref)))
+    assert all(m == "batch" for *_, m in eng.last_group_stats), \\
+        eng.last_group_stats
+
+ref = vals(eng.evaluate_many(qs, shard="never"))
+got = vals(eng.evaluate_many(qs, mesh=mesh, shard="force"))
+assert got == ref, [p for p in zip(got, ref) if p[0] != p[1]]
+print("sharded parity OK")
+"""
+    assert "sharded parity OK" in _run(code)
+
+
+def test_sharded_variants_and_anchors_bit_parity():
+    """Indexed / windowed / materialized-anchor groups keep bit-parity
+    under sharding, and a large auto-planned batch shards on its own
+    (the planner's dispatch cost term crosses the threshold)."""
+    code = _PARITY_PRELUDE + """
+t_mid = tc // 2
+store.materialized.add(t_mid, store.snapshot_at(t_mid,
+                                                use_materialized=False))
+store._engine_cache = None
+eng = store.engine(indexed=True, mesh=mesh)
+rng = np.random.default_rng(3)
+big = []
+for i in range(192):
+    v = int(rng.integers(0, 90))
+    t1 = int(rng.integers(1, tc))
+    t2 = min(tc, t1 + int(rng.integers(0, 6)))
+    kind = ("point", "diff", "agg")[i % 3]
+    big.append(Query(kind, "node", "degree", t_k=t1,
+                     t_l=None if kind == "point" else t2, v=v))
+ref = vals(eng.evaluate_many(big, shard="never"))
+assert all(m is None for *_, m in eng.last_group_stats)
+got = vals(eng.evaluate_many(big, mesh=mesh))
+assert got == ref, [p for p in zip(got, ref) if p[0] != p[1]]
+assert any(m is not None for *_, m in eng.last_group_stats), \\
+    eng.last_group_stats
+
+for kw in (dict(plan="two_phase", windowed=True),
+           dict(plan="hybrid", indexed=True),
+           dict(plan="delta_only", indexed=True)):
+    sub = [q for q in big[:48]
+           if q.kind == "diff" or kw.get("plan") != "delta_only"]
+    ref = vals(eng.evaluate_many(sub, shard="never", **kw))
+    got = vals(eng.evaluate_many(sub, mesh=mesh, shard="force", **kw))
+    assert got == ref, (kw, [p for p in zip(got, ref) if p[0] != p[1]])
+
+# small groups stay single-device under the auto cost term
+eng.evaluate_many(big[:3], mesh=mesh)
+assert all(m is None for *_, m in eng.last_group_stats), \\
+    eng.last_group_stats
+print("sharded variants OK")
+"""
+    assert "sharded variants OK" in _run(code)
 
 
 @pytest.mark.slow

@@ -185,6 +185,36 @@ def test_anchor_selector_no_candidates():
         sel.select(3, empty_delta(4))
 
 
+def test_anchor_selector_tie_break_current_wins():
+    """Equal op-distance between the current snapshot and a
+    materialized one must deterministically pick the current snapshot
+    (candidate order: current first, then materialized in store order —
+    ``min`` is stable).  Deterministic tie-breaking is what makes batch
+    grouping reproducible across runs."""
+    from repro.core.delta import delta_from_numpy
+    from repro.core.graph import empty_dense
+
+    # one op per time unit 1..8: window (2, 5] and (5, 8] both hold 3
+    ts = np.arange(1, 9, dtype=np.int32)
+    m = len(ts)
+    delta = delta_from_numpy(np.full(m, 2, np.int32), np.zeros(m, np.int32),
+                             np.ones(m, np.int32), np.zeros(m, np.int32),
+                             ts)
+    g = empty_dense(4)
+    sel = AnchorSelector([2], [g], t_cur=8, current=g,
+                         t_host=np.asarray(ts))
+    cands = sel.candidates(5, delta, "ops")
+    assert [c.cost for c in cands] == [3, 3]
+    assert sel.select(5, delta, "ops").anchor_id == -1
+    # equal-cost materialized snapshots: earliest in store order wins
+    sel2 = AnchorSelector([2, 8], [g, g], t_host=np.asarray(ts))
+    cands = sel2.candidates(5, delta, "ops")
+    assert [c.cost for c in cands] == [3, 3]
+    assert sel2.select(5, delta, "ops").anchor_id == 0
+    # the 'time' metric ties the same way
+    assert sel.select(5, delta, "time").anchor_id == -1
+
+
 def test_batched_two_phase_uses_materialized_anchor(small_history):
     """Two-phase groups anchored at a materialized snapshot return the
     same values as the current-anchored single path."""
@@ -262,6 +292,48 @@ def test_agg_series_budget_fallback(small_history):
         mat_snapshots=store.materialized.snapshots, series_budget=1)
     fallback = tiny.evaluate_many(qs)
     assert [_item(a) for a in normal] == [_item(b) for b in fallback]
+
+
+def test_mesh_single_device_host_fallback(small_history):
+    """With one visible device a mesh-bound engine must route every
+    group through the ordinary path (mode None) and return identical
+    results — the host-process fallback of the distributed layer."""
+    from repro.sharding.graph import graph_mesh, single_device
+    store, _ = small_history
+    mesh = graph_mesh()
+    assert single_device(mesh)  # conftest pins tests to one device
+    qs = _query_matrix(store)
+    base = [_item(r) for r in store.engine().evaluate_many(qs)]
+    eng = store.place_on_mesh(mesh)
+    got = [_item(r) for r in eng.evaluate_many(qs, mesh=mesh,
+                                               shard="force")]
+    assert got == base
+    assert all(m is None for *_, m in eng.last_group_stats)
+    store._engine_cache = None  # session fixture: drop the mesh engine
+
+
+def test_planner_shard_cost_term(small_history):
+    """The cross-device dispatch cost term: tiny groups stay local,
+    large groups shard, force overrides the threshold but never makes
+    an unshardable group shardable."""
+    store, _ = small_history
+    eng = store.engine()
+    pl = eng.planner
+    from repro.core.engine import _GroupKey
+    k2p = _GroupKey("two_phase", "point", "global", "num_edges", "",
+                    -1, False, False, False)
+    cap = eng.delta.capacity
+    assert pl.shard_mode(k2p, 1, 1, cap) is None          # 1 device
+    assert pl.shard_mode(k2p, 64, 8, cap) == "rows"       # big: rows
+    assert pl.shard_mode(k2p, 64, 7, cap) == "batch"      # 96 % 7 != 0
+    kb = _GroupKey("hybrid", "point", "node", "degree", "",
+                   -1, False, False, False)
+    assert pl.shard_mode(kb, 2, 8, cap) is None           # under threshold
+    assert pl.shard_mode(kb, 2, 8, cap, force=True) == "batch"
+    assert pl.shard_mode(kb, 512, 8, cap) == "batch"
+    kpart = _GroupKey("two_phase", "point", "node", "degree", "",
+                      -1, False, False, True)
+    assert pl.shard_mode(kpart, 512, 8, cap) == "batch"   # partial: no rows
 
 
 def test_store_query_auto_routes_through_planner(small_history):

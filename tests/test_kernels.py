@@ -55,6 +55,67 @@ class TestDeltaApply:
                              cap=8)
         assert bool(ovf)
 
+    @pytest.mark.parametrize("n_shards", [2, 4])
+    def test_row_blocks_concatenate_to_full(self, kstore, n_shards):
+        """Shard-safe bucketing: reconstructing each row block
+        independently (its own tile padding, global columns) and
+        concatenating equals the full reconstruction — the contract the
+        row-sharded mesh relies on."""
+        from repro.kernels.delta_apply.ops import delta_apply_row_block
+        d = kstore.delta()
+        n = kstore.n_cap
+        rb = n // n_shards
+        for tq in [0, kstore.t_cur // 2]:
+            ref = reconstruct_dense(kstore.current, d, kstore.t_cur, tq)
+            nodes, adjs = [], []
+            for row0 in range(0, n, rb):
+                nb, ab, ovf = delta_apply_row_block(
+                    kstore.current.nodes[row0:row0 + rb],
+                    kstore.current.adj[row0:row0 + rb], d, kstore.t_cur,
+                    tq, row0, tile=32, cap=2048)
+                assert not bool(ovf)
+                nodes.append(nb)
+                adjs.append(ab)
+            assert bool(jnp.all(jnp.concatenate(adjs) == ref.adj))
+            assert bool(jnp.all(jnp.concatenate(nodes) == ref.nodes))
+
+    def test_row_block_pad_band_excludes_next_shard(self, kstore):
+        """A block whose row count is not a tile multiple pads up to
+        the tile — ops owned by the NEXT shard must not leak into the
+        pad band (they would burn cap slots and raise a spurious
+        overflow), and a non-uniform split must still stitch exactly."""
+        from repro.core.delta import delta_from_numpy
+        from repro.kernels.delta_apply.ops import (delta_apply_row_block,
+                                                   bucket_ops)
+        # crafted log: 30 edge ops all touching row 50, which belongs
+        # to the SECOND shard of a (0..48, 48..128) split; shard 1's
+        # pad band covers rows 48..63 and must stay empty
+        k = 30
+        ops = np.full(k, 2, np.int32)                       # ADD_EDGE
+        us = np.full(k, 50, np.int32)
+        vs = np.arange(64, 64 + k, dtype=np.int32)
+        d50 = delta_from_numpy(ops, us, vs, np.zeros(k, np.int32),
+                               np.arange(1, k + 1, dtype=np.int32))
+        blocks, ovf = bucket_ops(d50, 128, 0, k, 32, 8, True,
+                                 n_rows=64, row0=0, n_valid_rows=48)
+        assert not bool(ovf)
+        assert int(jnp.sum(blocks[..., 3])) == 0   # nothing bucketed
+        # and the real-store non-uniform split stitches bit-exactly
+        d = kstore.delta()
+        tq = kstore.t_cur // 2
+        ref = reconstruct_dense(kstore.current, d, kstore.t_cur, tq)
+        nodes, adjs = [], []
+        for row0, rcount in ((0, 48), (48, 80)):
+            nb, ab, ovf = delta_apply_row_block(
+                kstore.current.nodes[row0:row0 + rcount],
+                kstore.current.adj[row0:row0 + rcount], d, kstore.t_cur,
+                tq, row0, tile=32, cap=2048)
+            assert not bool(ovf), (row0, rcount)
+            nodes.append(nb)
+            adjs.append(ab)
+        assert bool(jnp.all(jnp.concatenate(adjs) == ref.adj))
+        assert bool(jnp.all(jnp.concatenate(nodes) == ref.nodes))
+
 
 class TestDegreeSeries:
     @pytest.mark.parametrize("tile,buckets", [(32, 8), (64, 16), (128, 5)])
@@ -69,6 +130,28 @@ class TestDegreeSeries:
         ref = degree_series_ref(kstore.current, d, tk, kstore.t_cur,
                                 buckets)
         assert bool(jnp.all(out == ref)), (tile, buckets)
+
+    def test_node_blocks_concatenate_to_full(self, kstore):
+        """Shard-safe event bucketing: per-node-block series stitched
+        along the node axis equal the full-kernel series."""
+        from repro.kernels.degree_series import degree_series_kernel
+        from repro.kernels.degree_series.ops import degree_series_rows
+        d = kstore.delta()
+        tk = kstore.t_cur // 3
+        buckets = 8
+        full, ovf = degree_series_kernel(kstore.current, d, tk, buckets,
+                                         tile=32, cap=4096)
+        assert not bool(ovf)
+        deg = kstore.current.degrees()
+        n = kstore.n_cap
+        parts = []
+        for row0 in range(0, n, n // 4):
+            s, ovf = degree_series_rows(deg[row0:row0 + n // 4], d, tk,
+                                        buckets, row0=row0, tile=32,
+                                        cap=4096)
+            assert not bool(ovf)
+            parts.append(s)
+        assert bool(jnp.all(jnp.concatenate(parts, axis=1) == full))
 
 
 class TestFlashAttention:
