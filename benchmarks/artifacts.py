@@ -50,6 +50,18 @@ def make_artifact(name: str, results: dict,
     }
 
 
+def merge_xla_flags(existing: str | None, *forced: str) -> str:
+    """Append ``forced`` XLA flags to a pre-set ``XLA_FLAGS`` value
+    instead of clobbering it (benchmark re-exec paths run under CI
+    lanes that already export flags).  A forced flag replaces any
+    existing setting of the same ``--flag=`` key; everything else the
+    caller had set is preserved."""
+    keys = {f.split("=", 1)[0] for f in forced}
+    kept = [f for f in (existing or "").split()
+            if f.split("=", 1)[0] not in keys]
+    return " ".join(kept + list(forced))
+
+
 def write_artifact(path: str, artifact: dict) -> str:
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:

@@ -94,8 +94,15 @@ def worker(n_nodes: int, n_queries: int, reps: int, seed: int) -> dict:
 
 
 def spawn(n_dev: int, args) -> dict:
+    if ROOT not in sys.path:
+        sys.path.insert(0, ROOT)
+    from benchmarks.artifacts import merge_xla_flags
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    # append to (don't clobber) a pre-set XLA_FLAGS — only the device
+    # count is forced, everything else the caller exported is kept
+    env["XLA_FLAGS"] = merge_xla_flags(
+        env.get("XLA_FLAGS"),
+        f"--xla_force_host_platform_device_count={n_dev}")
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     cmd = [sys.executable, os.path.abspath(__file__), "--worker",

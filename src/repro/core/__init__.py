@@ -7,8 +7,9 @@ from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
                               empty_delta, minimal_delta_between, slice_delta)
 from repro.core.engine import (AnchorCandidate, AnchorSelector,
                                HistoricalQueryEngine, PlanChoice, Planner)
-from repro.core.graph import DenseGraph, EdgeGraph, dense_from_numpy, \
-    empty_dense, empty_edge
+from repro.core.graph import (DenseGraph, EdgeGraph, dense_from_numpy,
+                              dense_to_edge, edge_to_dense, empty_dense,
+                              empty_edge)
 from repro.core.index import (NodeIndex, build_node_index,
                               build_node_index_host, count_window_ops,
                               gather_node_ops, gather_window, temporal_range)

@@ -43,11 +43,12 @@ except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
 
 from repro.core.delta import ADD_EDGE, Delta
-from repro.core.graph import DenseGraph
+from repro.core.graph import DenseGraph, EdgeGraph
 from repro.core.plans import masked_aggregate
 from repro.core.reconstruct import _lww_decide
 from repro.sharding.graph import (AXIS, batch_specs,  # noqa: F401
-                                  graph_mesh, replicate, shard_rows)
+                                  graph_mesh, replicate, shard_rows,
+                                  shard_slots)
 # graph_mesh / replicate are re-exported: callers historically import
 # them from here.
 
@@ -55,6 +56,11 @@ from repro.sharding.graph import (AXIS, batch_specs,  # noqa: F401
 def shard_graph(g: DenseGraph, mesh: Mesh) -> DenseGraph:
     """Place adjacency rows / node mask row-sharded on the mesh."""
     return shard_rows(g, mesh)
+
+
+def shard_edge_graph(g: EdgeGraph, mesh: Mesh) -> EdgeGraph:
+    """Place an edge-layout snapshot slot-sharded on the mesh."""
+    return shard_slots(g, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +218,181 @@ def _two_phase_rows_local(nodes_l, adj_l, delta, t_anchor, tks, tls, vs,
 
     parts = jax.vmap(one)(tks, tls, vs)                      # [B, nb, 2]
     vals = _row_finalize(jax.lax.psum(parts, AXIS), measure)  # [B, nb]
+    return jax.vmap(
+        lambda row, tk, tl: masked_aggregate(row, tl - tk + 1,
+                                             num_buckets, agg))(
+        vals, tks, tls)
+
+
+# ---------------------------------------------------------------------------
+# Sharded group execution: slot-sharded edge-layout two-phase
+# ---------------------------------------------------------------------------
+
+# Measures combinable from per-slot-shard integer partials.  Slots
+# partition the edge set (each undirected edge lives in exactly one
+# slot), so per-shard popcounts / incident-slot counts sum to the
+# global count — the same exactness argument as row-sharding, with the
+# simplification that no edge is ever double-counted (rows see each
+# edge twice, slots once).
+SLOT_MEASURES = ROW_MEASURES
+
+
+def _slot_parts(nodes_cur, live_l, eu_l, ev_l, v, measure: str):
+    """Integer partial sums of this shard's slot block: i32[2] =
+    (node-ish partial, edge partial).  The node mask is replicated
+    (N-sized), so only shard 0 contributes its count."""
+    i32 = jnp.int32
+    if measure == "degree":
+        touch = live_l & ((eu_l == v) | (ev_l == v))
+        return jnp.stack([jnp.sum(touch.astype(i32)),
+                          jnp.zeros((), i32)])
+    on_zero = jax.lax.axis_index(AXIS) == 0
+    nn = jnp.where(on_zero, jnp.sum(nodes_cur.astype(i32)), 0)
+    ee = jnp.sum(live_l.astype(i32))
+    return jnp.stack([nn, ee])
+
+
+def _slot_finalize(tot, measure: str):
+    """Global measure from psum'd slot partials — identical arithmetic
+    to the single-device edge measures (``core.queries``): slots count
+    each edge once, so no halving (unlike ``_row_finalize``)."""
+    if measure in ("degree", "num_nodes"):
+        return tot[..., 0]
+    if measure == "num_edges":
+        return tot[..., 1]
+    n = tot[..., 0]
+    e = tot[..., 1]
+    if measure == "density":
+        nf = n.astype(jnp.float32)
+        ef = e.astype(jnp.float32)
+        return jnp.where(nf > 1, 2.0 * ef / (nf * (nf - 1.0)), 0.0)
+    if measure == "avg_degree":
+        nf = jnp.maximum(n, 1).astype(jnp.float32)
+        return 2.0 * e.astype(jnp.float32) / nf
+    raise ValueError(f"measure {measure} is not slot-decomposable")
+
+
+_SLOT_CACHE: dict = {}
+
+
+def two_phase_slots(mesh: Mesh, anchor: EdgeGraph, delta: Delta, t_anchor,
+                    tks, tls, vs, *, kind: str, measure: str,
+                    agg: str = "", num_buckets: int = 0):
+    """One edge-layout two-phase (plan, anchor) group as a
+    slot-parallel program.
+
+    The anchor's slot registry (eu/ev/emask) is split over the mesh
+    (``shard_slots`` layout); the node mask, the delta and the query
+    arrays are replicated.  Each device LWW-reconstructs only its slot
+    block per query time (O(B · E/D) scatter work) and emits integer
+    partial sums; one psum per group combines them and the measure is
+    finalized with the single-device edge formula, so results
+    bit-match ``core.engine.batch_edge_two_phase_*`` — and hence the
+    dense path too (tests/test_distributed.py).
+
+    Supported: kind ∈ {point, diff, agg} × measure ∈ SLOT_MEASURES.
+    """
+    key = (mesh, kind, measure, agg, num_buckets)
+    fn = _SLOT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map(
+            functools.partial(_two_phase_slots_local, kind=kind,
+                              measure=measure, agg=agg,
+                              num_buckets=num_buckets),
+            mesh=mesh,
+            in_specs=(P(), P(AXIS), P(AXIS), P(AXIS), P(), P(), P(),
+                      P(), P(), P()),
+            out_specs=P()))
+        _SLOT_CACHE[key] = fn
+    return fn(anchor.nodes, anchor.eu, anchor.ev, anchor.emask,
+              anchor.n_edges_reg, delta, t_anchor, tks, tls, vs)
+
+
+def _slot_lww(emask_l, delta: Delta, t_anchor, t_query, slot0):
+    """Shard-local last-writer-wins over the local slot block (ops are
+    pre-resolved to slot ids host-side, so this is a 1-D scatter)."""
+    e_loc = emask_l.shape[0]
+    m = delta.capacity
+    forward = t_query >= t_anchor
+    t_lo = jnp.minimum(t_anchor, t_query)
+    t_hi = jnp.maximum(t_anchor, t_query)
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    idx = jnp.arange(m, dtype=jnp.int32)
+
+    ew = in_win & delta.is_edge_op()
+    ls = delta.slot - slot0
+    ok = ew & (ls >= 0) & (ls < e_loc)
+    ls = jnp.clip(ls, 0, e_loc - 1)
+    first = jnp.full((e_loc,), m, jnp.int32).at[ls].min(
+        jnp.where(ok, idx, m))
+    last = jnp.full((e_loc,), -1, jnp.int32).at[ls].max(
+        jnp.where(ok, idx, -1))
+    dec, val = _lww_decide(first, last, delta.op, forward, m, ADD_EDGE)
+    return jnp.where(dec, val, emask_l)
+
+
+def _node_lww(nodes, delta: Delta, t_anchor, t_query):
+    """Full-N node-mask LWW (the node mask is replicated on every
+    shard — it is N-sized, negligible next to the slot scatter)."""
+    n = nodes.shape[0]
+    m = delta.capacity
+    forward = t_query >= t_anchor
+    t_lo = jnp.minimum(t_anchor, t_query)
+    t_hi = jnp.maximum(t_anchor, t_query)
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    idx = jnp.arange(m, dtype=jnp.int32)
+    nw = in_win & delta.is_node_op()
+    firstn = jnp.full((n,), m, jnp.int32).at[delta.u].min(
+        jnp.where(nw, idx, m))
+    lastn = jnp.full((n,), -1, jnp.int32).at[delta.u].max(
+        jnp.where(nw, idx, -1))
+    dec_n, val_n = _lww_decide(firstn, lastn, delta.op, forward, m, 0)
+    return jnp.where(dec_n, val_n, nodes)
+
+
+def _two_phase_slots_local(nodes, eu_l, ev_l, emask_l, n_reg, delta,
+                           t_anchor, tks, tls, vs, *, kind, measure, agg,
+                           num_buckets):
+    e_loc = emask_l.shape[0]
+    slot0 = jax.lax.axis_index(AXIS) * e_loc
+    reg_l = (slot0 + jnp.arange(e_loc, dtype=jnp.int32)) < n_reg
+
+    def parts_at(emask_base, nodes_base, t_base, t, v):
+        em = _slot_lww(emask_base, delta, t_base, t, slot0)
+        nd = _node_lww(nodes_base, delta, t_base, t)
+        p = _slot_parts(nd, em & reg_l, eu_l, ev_l, v, measure)
+        return p, (em, nd)
+
+    if kind == "point":
+        def one(t, v):
+            return parts_at(emask_l, nodes, t_anchor, t, v)[0]
+
+        parts = jax.vmap(one)(tks, vs)                       # [B, 2]
+        return _slot_finalize(jax.lax.psum(parts, AXIS), measure)
+
+    if kind == "diff":
+        # SG_tl from the anchor, then SG_tk from SG_tl — the same
+        # nearer-snapshot reuse as the single-device diff kernel.
+        def one(tk, tl, v):
+            p_l, (em, nd) = parts_at(emask_l, nodes, t_anchor, tl, v)
+            p_k, _ = parts_at(em, nd, tl, tk, v)
+            return p_l, p_k
+
+        p_l, p_k = jax.vmap(one)(tks, tls, vs)               # [B, 2] each
+        a = _slot_finalize(jax.lax.psum(p_l, AXIS), measure)
+        b = _slot_finalize(jax.lax.psum(p_k, AXIS), measure)
+        return jnp.abs(a - b)
+
+    # agg: one reconstruction per bucket (times past each query's t_l
+    # are computed but masked by masked_aggregate, exactly as in
+    # batch_edge_two_phase_agg).
+    def one(tk, tl, v):
+        ts = tk + jnp.arange(num_buckets, dtype=jnp.int32)
+        return jax.lax.map(
+            lambda t: parts_at(emask_l, nodes, t_anchor, t, v)[0], ts)
+
+    parts = jax.vmap(one)(tks, tls, vs)                      # [B, nb, 2]
+    vals = _slot_finalize(jax.lax.psum(parts, AXIS), measure)  # [B, nb]
     return jax.vmap(
         lambda row, tk, tl: masked_aggregate(row, tl - tk + 1,
                                              num_buckets, agg))(

@@ -42,15 +42,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delta import Delta
-from repro.core.graph import DenseGraph
+from repro.core.graph import DenseGraph, EdgeGraph, dense_to_edge
 from repro.core.index import (NodeIndex, count_window_ops, gather_node_ops,
                               gather_window)
 from repro.core.partial import partial_reconstruct, seed_mask
 from repro.core.plans import (Query, applicable_plans,
                               delta_only_degree_diff, hybrid_point_degree,
                               masked_aggregate)
-from repro.core.queries import GLOBAL_MEASURES, NODE_MEASURES
-from repro.core.reconstruct import degree_series, reconstruct_dense
+from repro.core.queries import (EDGE_GLOBAL_MEASURES, EDGE_NODE_MEASURES,
+                                GLOBAL_MEASURES, NODE_MEASURES,
+                                edge_supported)
+from repro.core.reconstruct import (degree_series, reconstruct_dense,
+                                    reconstruct_edge)
 
 
 def _pow2(n: int, lo: int = 1) -> int:
@@ -160,6 +163,7 @@ class PlanChoice:
     indexed: bool = False     # node-centric index (§3.3.2)
     windowed: bool = False    # temporal-index window slice (§3.3.2)
     partial: bool = False     # partial reconstruction (§3.3.1)
+    layout: str = "dense"     # dense (N² adjacency) | edge (E slots)
     cost: int = 0             # planner's op-count estimate
 
 
@@ -188,13 +192,20 @@ class Planner:
     def __init__(self, selector: AnchorSelector, *, n_cap: int,
                  index: NodeIndex | None = None, node_cap: int = 1024,
                  selection: Literal["time", "ops"] = "ops",
-                 dispatch_overhead: int = DISPATCH_OVERHEAD_OPS):
+                 dispatch_overhead: int = DISPATCH_OVERHEAD_OPS,
+                 e_cap: int = 0, dense_available: bool = True,
+                 edge_available: bool = False):
         self.selector = selector
         self.n_cap = int(n_cap)
         self.index = index
         self.node_cap = int(node_cap)
         self.selection = selection
         self.dispatch_overhead = int(dispatch_overhead)
+        # edge-slot layout statistics (0 / False when the engine has no
+        # slot registry — e.g. engines built from bare arrays)
+        self.e_cap = int(e_cap)
+        self.dense_available = bool(dense_available)
+        self.edge_available = bool(edge_available)
         self._row_ptr_host: np.ndarray | None = None
 
     def _window_ops(self, delta: Delta, t_lo, t_hi) -> int:
@@ -210,6 +221,30 @@ class Planner:
             self._row_ptr_host = np.asarray(self.index.row_ptr)
         ptr = self._row_ptr_host
         return int(ptr[v + 1] - ptr[v])
+
+    def layout_for(self, q: Query, plan: str) -> str:
+        """{dense, edge} execution layout for one query.
+
+        Edge-slot layout is eligible when the engine carries a slot
+        registry and the measure has an edge implementation; among
+        eligible queries the N²-vs-E cost term decides: a two-phase
+        reconstruction pays the dense LWW scatter (O(N²), or O(N) with
+        partial reconstruction) vs the slot scatter (O(E)).  The
+        measure-only plans (hybrid / delta-only) never materialize N²,
+        so they keep the dense row read unless the dense snapshot is
+        absent entirely (large-graph edge-only serving).
+        """
+        if not self.edge_available or not edge_supported(q.measure,
+                                                         q.scope):
+            return "dense"
+        if not self.dense_available:
+            return "edge"
+        if plan != "two_phase":
+            return "dense"
+        dense_scatter = (self.n_cap if q.scope == "node"
+                         and q.measure == "degree" and q.kind != "diff"
+                         else self.n_cap ** 2 // 64)
+        return "edge" if self.e_cap // 64 < dense_scatter else "dense"
 
     def choose(self, q: Query, delta: Delta, t_cur: int) -> PlanChoice:
         plans = applicable_plans(q)
@@ -252,20 +287,23 @@ class Planner:
         # the full log (pow2 capacities bound recompiles).
         windowed = (best_plan == "two_phase"
                     and _pow2(anchor.cost, 64) * 2 <= delta.capacity)
+        layout = self.layout_for(q, best_plan)
         return PlanChoice(plan=best_plan, anchor_id=anchor.anchor_id,
                           t_anchor=anchor.t, indexed=indexed,
                           windowed=windowed,
-                          partial=use_partial and best_plan == "two_phase",
-                          cost=best_cost)
+                          partial=(use_partial and best_plan == "two_phase"
+                                   and layout == "dense"),
+                          layout=layout, cost=best_cost)
 
     # ------------------------------------------------- cross-device dispatch
 
     def shard_mode(self, key, b: int, n_dev: int, delta_cap: int,
                    *, force: bool = False) -> str | None:
         """How to shard one (plan, anchor) group of ``b`` queries over
-        ``n_dev`` devices: ``"rows"`` (two-phase row-sharded scatter +
-        psum measures), ``"batch"`` (replicate graph, split the query
-        axis), or ``None`` (stay single-device).
+        ``n_dev`` devices: ``"rows"`` (dense two-phase row-sharded
+        scatter + psum measures), ``"slots"`` (edge two-phase
+        slot-sharded scatter + psum measures), ``"batch"`` (replicate
+        graph, split the query axis), or ``None`` (stay single-device).
 
         The decision is a cost term: a multi-device program pays a
         fixed ``dispatch_overhead`` (collective setup + launch), so it
@@ -274,10 +312,23 @@ class Planner:
         skips the threshold (tests, benchmarks) but never makes an
         unshardable group shardable.
         """
-        from repro.core.distributed import ROW_MEASURES
+        from repro.core.distributed import ROW_MEASURES, SLOT_MEASURES
         if n_dev <= 1:
             return None
-        if key.plan == "two_phase":
+        if key.plan == "two_phase" and getattr(key, "layout",
+                                               "dense") == "edge":
+            # Slot-sharding: the LWW slot scatter splits over the slot
+            # axis; measures combine as psum'd integer partials exactly
+            # like row-sharding (slots partition the edge set, so
+            # per-shard popcounts/degree counts sum to the global
+            # value — same exactness argument, 1-D instead of 2-D).
+            if (key.measure in SLOT_MEASURES and self.e_cap
+                    and self.e_cap % n_dev == 0):
+                # per query: one masked log scan + one slot scatter
+                work = b * max(delta_cap, self.e_cap)
+                if force or work - work // n_dev > self.dispatch_overhead:
+                    return "slots"
+        elif key.plan == "two_phase":
             # Row-sharding needs a row-decomposable measure, an even
             # row split, and no partial reconstruction (the closure
             # mask is a full-graph object).
@@ -305,10 +356,35 @@ class Planner:
 # ---------------------------------------------------------------------------
 
 
-def _measure_named(g: DenseGraph, measure: str, scope: str, v):
+def _snapshot_bytes(g) -> int:
+    """Approximate device footprint of a cached snapshot (bool N² for
+    dense, (4+4+1)·E + N for edge) — drives the reconstruction LRU's
+    byte budget."""
+    if isinstance(g, EdgeGraph):
+        return 9 * g.e_cap + g.n_cap
+    return g.n_cap * g.n_cap + g.n_cap
+
+
+def _measure_named(g, measure: str, scope: str, v):
+    """Measure dispatch over both snapshot layouts: the edge-layout
+    measures are segment reductions with the exact same integer counts
+    and f32 finalizations as the dense ones, so layout never changes a
+    result bit (tests/test_engine.py edge-parity)."""
+    if isinstance(g, EdgeGraph):
+        if scope == "node":
+            return EDGE_NODE_MEASURES[measure](g, v)
+        return EDGE_GLOBAL_MEASURES[measure](g)
     if scope == "node":
         return NODE_MEASURES[measure](g, v)
     return GLOBAL_MEASURES[measure](g)
+
+
+@partial(jax.jit, static_argnames=("measure", "scope"))
+def batch_measure(g, vs, *, measure: str, scope: str):
+    """Measure one (already reconstructed) snapshot at B nodes — the
+    execution half of the per-anchor reconstruction cache: a cache hit
+    skips the LWW delta replay and runs only this."""
+    return jax.vmap(lambda v: _measure_named(g, measure, scope, v))(vs)
 
 
 @partial(jax.jit, static_argnames=("measure", "scope", "use_partial",
@@ -373,6 +449,68 @@ def batch_two_phase_agg(anchor: DenseGraph, delta: Delta, t_anchor,
                                         passes=passes)
             else:
                 g = reconstruct_dense(anchor, delta, t_anchor, t)
+            return _measure_named(g, measure, scope, v)
+
+        vals = jax.lax.map(m_at, ts)
+        return masked_aggregate(vals, tl - tk + 1, num_buckets, agg)
+
+    return jax.vmap(one)(tks, tls, vs)
+
+
+# ---- edge-slot-layout two-phase kernels (O(E) per query, no N²) ----
+#
+# Same shape as the dense batch_two_phase_* kernels with the LWW slot
+# scatter (reconstruct_edge) in place of the dense cell scatter; the
+# hybrid / delta-only kernels below are layout-polymorphic already
+# (they only touch the snapshot through degree()/degrees(), which both
+# layouts implement with identical integer results), so edge-layout
+# groups of those plans reuse them with an EdgeGraph operand.
+
+
+@partial(jax.jit, static_argnames=("measure", "scope"))
+def batch_edge_two_phase_point(anchor: EdgeGraph, delta: Delta, t_anchor,
+                               ts, vs, *, measure: str, scope: str):
+    """B point queries against one edge-layout anchor: one vmapped
+    1-D LWW slot scatter per query — O(B·(M + E)) instead of
+    O(B·(M + N²))."""
+
+    def one(t, v):
+        g = reconstruct_edge(anchor, delta, t_anchor, t)
+        return _measure_named(g, measure, scope, v)
+
+    return jax.vmap(one)(ts, vs)
+
+
+@partial(jax.jit, static_argnames=("measure", "scope"))
+def batch_edge_two_phase_diff(anchor: EdgeGraph, delta: Delta, t_anchor,
+                              tks, tls, vs, *, measure: str, scope: str):
+    """B range-differential queries, nearer-snapshot reuse exactly like
+    the dense diff kernel (SG_tl from the anchor, SG_tk from SG_tl)."""
+
+    def one(tk, tl, v):
+        g_l = reconstruct_edge(anchor, delta, t_anchor, tl)
+        g_k = reconstruct_edge(g_l, delta, tl, tk)
+        a = _measure_named(g_l, measure, scope, v)
+        b = _measure_named(g_k, measure, scope, v)
+        return jnp.abs(a - b)
+
+    return jax.vmap(one)(tks, tls, vs)
+
+
+@partial(jax.jit, static_argnames=("measure", "scope", "num_buckets",
+                                   "agg"))
+def batch_edge_two_phase_agg(anchor: EdgeGraph, delta: Delta, t_anchor,
+                             tks, tls, vs, *, measure: str, scope: str,
+                             num_buckets: int, agg: str):
+    """B range-aggregate queries: a vmapped scan of slot
+    reconstructions (buckets past t_l are masked, identically to the
+    dense agg kernel)."""
+
+    def one(tk, tl, v):
+        ts = tk + jnp.arange(num_buckets, dtype=jnp.int32)
+
+        def m_at(t):
+            g = reconstruct_edge(anchor, delta, t_anchor, t)
             return _measure_named(g, measure, scope, v)
 
         vals = jax.lax.map(m_at, ts)
@@ -497,6 +635,18 @@ class _GroupKey:
     indexed: bool
     windowed: bool
     partial: bool
+    layout: str = "dense"
+
+
+class GroupStats(list):
+    """``last_group_stats``: the per-call list of (group key, batch,
+    shard mode) rows, plus the reconstruction-cache counters for the
+    call (hits skip the LWW delta replay entirely)."""
+
+    def __init__(self, *a):
+        super().__init__(*a)
+        self.cache_hits = 0
+        self.cache_misses = 0
 
 
 class HistoricalQueryEngine:
@@ -508,14 +658,20 @@ class HistoricalQueryEngine:
     cache invalidate) after ingesting new ops.
     """
 
-    def __init__(self, current: DenseGraph, delta: Delta, t_cur: int, *,
+    def __init__(self, current: DenseGraph | None, delta: Delta,
+                 t_cur: int, *,
                  mat_times: Sequence[int] = (),
                  mat_snapshots: Sequence[DenseGraph] = (),
                  index: NodeIndex | None = None, node_cap: int = 1024,
                  selection: Literal["time", "ops"] = "ops",
                  passes: int = 2, series_budget: int = 1 << 24,
-                 mesh=None):
+                 mesh=None, current_edge: EdgeGraph | None = None,
+                 snap_cache_cap: int = 16):
+        if current is None and current_edge is None:
+            raise ValueError("need a current snapshot in at least one "
+                             "layout")
         self.current = current
+        self.current_edge = current_edge
         self.delta = delta
         self.t_cur = int(t_cur)
         self.index = index
@@ -526,33 +682,70 @@ class HistoricalQueryEngine:
         self.series_budget = int(series_budget)
         # Serving mesh (None → single-device).  Snapshot/delta arrays
         # are placed on it lazily per role (replicated for batch-axis
-        # groups, row-sharded per anchor for two-phase groups) and
+        # groups, row/slot-sharded per anchor for two-phase groups) and
         # cached, so steady-state serving does no host→device copies.
         self.mesh = mesh
         self._placed_rep: dict = {}     # (mesh, role) -> replicated tree
         self._placed_rows: dict = {}    # (mesh, anchor_id) -> row-sharded
+        self._placed_slots: dict = {}   # (mesh, anchor_id) -> slot-sharded
+        # Per-anchor reconstruction LRU: (anchor_id, t, layout) ->
+        # reconstructed snapshot.  Hot timestamps skip the delta replay
+        # (point groups + store.snapshot_at); hit/miss counters land in
+        # last_group_stats per call and on the engine cumulatively.
+        # Eviction is bounded by entry count AND by device bytes
+        # (``snap_cache_bytes``) — dense N² snapshots are big, so large
+        # graphs keep only as many as fit the budget (edge-layout
+        # entries are E-sized and effectively always fit).
+        self.snap_cache_cap = int(snap_cache_cap)
+        self.snap_cache_bytes = 256 << 20
+        self._snap_cache_total = 0
+        from collections import OrderedDict
+        self._snap_cache: "OrderedDict" = OrderedDict()
+        self.cache_hits = 0
+        self.cache_misses = 0
         # Per-call instrumentation: [(group key, batch, shard mode)].
-        self.last_group_stats: list = []
+        # The cache counters on it are only live inside evaluate_many —
+        # direct reconstruct_cached calls (store.snapshot_at) must not
+        # retroactively mutate a previous call's saved stats.
+        self.last_group_stats: GroupStats = GroupStats()
+        self._stats_active = False
+        # Edge-layout anchors are derived lazily from the dense ones
+        # through the slot registry (dense_to_edge) and cached.
+        self._edge_anchors: dict = {}
         # One host copy of the sorted timestamps: all per-query costing
         # (anchor selection + plan choice) runs sync-free on it.
         self.t_host = np.asarray(delta.t)
-        self.selector = AnchorSelector(mat_times, mat_snapshots,
-                                       t_cur=self.t_cur, current=current,
-                                       t_host=self.t_host)
-        self.planner = Planner(self.selector, n_cap=current.n_cap,
-                               index=index, node_cap=node_cap,
-                               selection=selection)
+        n_cap = (current.n_cap if current is not None
+                 else current_edge.n_cap)
+        # edge-only engines register the edge current as the -1 anchor
+        # (the planner never routes dense groups without a dense
+        # current, so get(-1) always returns the right layout)
+        self.selector = AnchorSelector(
+            mat_times, mat_snapshots, t_cur=self.t_cur,
+            current=current if current is not None else current_edge,
+            t_host=self.t_host)
+        self.planner = Planner(
+            self.selector, n_cap=n_cap, index=index, node_cap=node_cap,
+            selection=selection,
+            e_cap=current_edge.e_cap if current_edge is not None else 0,
+            dense_available=current is not None,
+            edge_available=current_edge is not None)
 
     @classmethod
     def from_store(cls, store, *, indexed: bool = False,
                    node_cap: int = 1024,
                    selection: Literal["time", "ops"] = "ops",
                    mesh=None):
-        return cls(store.current, store.delta(), store.t_cur,
+        current = store.current
+        if not isinstance(current, DenseGraph):
+            current = None  # edge-layout store: no N² state anywhere
+        get_edge = getattr(store, "current_edge_snapshot", None)
+        return cls(current, store.delta(), store.t_cur,
                    mat_times=store.materialized.times,
                    mat_snapshots=store.materialized.snapshots,
                    index=store.node_index() if indexed else None,
-                   node_cap=node_cap, selection=selection, mesh=mesh)
+                   node_cap=node_cap, selection=selection, mesh=mesh,
+                   current_edge=get_edge() if get_edge else None)
 
     # --------------------------------------------------- device placement
 
@@ -574,16 +767,86 @@ class HistoricalQueryEngine:
             self._placed_rows[key] = shard_graph(g, mesh)
         return self._placed_rows[key]
 
+    def _slot_sharded_anchor(self, mesh, anchor_id: int):
+        """Cache the slot-sharded placement of one edge-layout anchor."""
+        key = (mesh, anchor_id)
+        if key not in self._placed_slots:
+            from repro.sharding.graph import shard_slots
+            _, g = self.edge_anchor(anchor_id)
+            self._placed_slots[key] = shard_slots(g, mesh)
+        return self._placed_slots[key]
+
+    # ------------------------------------------------------ edge anchors
+
+    def edge_anchor(self, anchor_id: int) -> tuple[int, EdgeGraph]:
+        """(t, snapshot) of an anchor in edge-slot layout.
+
+        The current snapshot comes straight from the store's registry;
+        materialized (dense) anchors are converted once through
+        ``dense_to_edge`` over that same registry and cached — an O(E)
+        gather, conversion is exact for any snapshot because slots are
+        append-only."""
+        if self.current_edge is None:
+            raise ValueError("engine has no edge-slot registry")
+        if anchor_id == -1:
+            return self.t_cur, self.current_edge
+        cached = self._edge_anchors.get(anchor_id)
+        if cached is None:
+            t_a, g = self.selector.get(anchor_id)
+            if not isinstance(g, EdgeGraph):
+                g = dense_to_edge(g, self.current_edge)
+            cached = (t_a, g)
+            self._edge_anchors[anchor_id] = cached
+        return cached
+
+    # ------------------------------------------- reconstruction cache
+
+    def reconstruct_cached(self, anchor_id: int, t: int,
+                           layout: str = "dense"):
+        """LWW reconstruction of SG_t from one anchor, through the
+        per-anchor LRU: repeated queries at hot timestamps skip the
+        delta replay and only pay the measure."""
+        key = (int(anchor_id), int(t), layout)
+        g = self._snap_cache.get(key)
+        if g is not None:
+            self._snap_cache.move_to_end(key)
+            self.cache_hits += 1
+            if self._stats_active:
+                self.last_group_stats.cache_hits += 1
+            return g
+        self.cache_misses += 1
+        if self._stats_active:
+            self.last_group_stats.cache_misses += 1
+        if layout == "edge":
+            t_a, g_a = self.edge_anchor(anchor_id)
+            g = reconstruct_edge(g_a, self.delta, t_a, t)
+        else:
+            t_a, g_a = self.selector.get(anchor_id)
+            g = reconstruct_dense(g_a, self.delta, t_a, t)
+        if self.snap_cache_cap > 0:
+            self._snap_cache[key] = g
+            self._snap_cache_total += _snapshot_bytes(g)
+            while self._snap_cache and (
+                    len(self._snap_cache) > self.snap_cache_cap
+                    or self._snap_cache_total > self.snap_cache_bytes):
+                _, old = self._snap_cache.popitem(last=False)
+                self._snap_cache_total -= _snapshot_bytes(old)
+        return g
+
     # ------------------------------------------------------------- planning
 
     def plan(self, q: Query) -> PlanChoice:
         return self.planner.choose(q, self.delta, self.t_cur)
 
     def _resolve(self, q: Query, plan: str, indexed: bool | None,
-                 partial_rows: bool | None,
-                 windowed: bool | None) -> PlanChoice:
+                 partial_rows: bool | None, windowed: bool | None,
+                 layout: str | None = None) -> PlanChoice:
         """Forced-plan / forced-variant resolution (test compatibility:
-        mirrors the ``plans.evaluate`` kwargs)."""
+        mirrors the ``plans.evaluate`` kwargs).  ``layout`` forces the
+        execution layout: ``"edge"`` falls back to dense per query when
+        the measure has no edge implementation (mirroring how forced
+        plans fall back for non-degree measures); ``"dense"`` /
+        ``"edge"`` raise when the engine lacks that layout entirely."""
         if plan == "auto":
             c = self.plan(q)
         else:
@@ -593,7 +856,8 @@ class HistoricalQueryEngine:
                       if plan == "two_phase"
                       else AnchorCandidate(-1, self.t_cur, 0))
             c = PlanChoice(plan=plan, anchor_id=anchor.anchor_id,
-                           t_anchor=anchor.t)
+                           t_anchor=anchor.t,
+                           layout=self.planner.layout_for(q, plan))
         if indexed is not None:
             c = dataclasses.replace(
                 c, indexed=indexed and self.index is not None)
@@ -606,12 +870,32 @@ class HistoricalQueryEngine:
             # mirror plans.evaluate's fallback to two-phase for every
             # other measure instead of running the wrong kernel.
             anchor = self.selector.select(q.t_k, self.delta)
-            c = dataclasses.replace(c, plan="two_phase",
-                                    anchor_id=anchor.anchor_id,
-                                    t_anchor=anchor.t, indexed=False)
+            c = dataclasses.replace(
+                c, plan="two_phase", anchor_id=anchor.anchor_id,
+                t_anchor=anchor.t, indexed=False,
+                layout=self.planner.layout_for(q, "two_phase"))
         if c.plan != "two_phase":
             c = dataclasses.replace(c, partial=False, windowed=False,
                                     anchor_id=-1, t_anchor=self.t_cur)
+        if layout is not None and layout != "auto":
+            if layout == "edge":
+                ok = (self.current_edge is not None
+                      and edge_supported(q.measure, q.scope))
+                if not ok and self.current is None:
+                    raise ValueError(f"measure {q.measure} has no "
+                                     "edge-layout implementation and "
+                                     "the engine has no dense state")
+                c = dataclasses.replace(c,
+                                        layout="edge" if ok else "dense")
+            elif layout == "dense":
+                if self.current is None:
+                    raise ValueError("engine has no dense snapshot")
+                c = dataclasses.replace(c, layout="dense")
+            else:
+                raise ValueError(f"unknown layout {layout!r}")
+        if c.layout == "edge":
+            # partial reconstruction is a dense-rows concept
+            c = dataclasses.replace(c, partial=False)
         return c
 
     def _group_key(self, q: Query, c: PlanChoice) -> _GroupKey:
@@ -619,7 +903,7 @@ class HistoricalQueryEngine:
                          measure=q.measure, agg=q.agg if q.kind == "agg"
                          else "", anchor_id=c.anchor_id,
                          indexed=c.indexed, windowed=c.windowed,
-                         partial=c.partial)
+                         partial=c.partial, layout=c.layout)
 
     # ------------------------------------------------------------ execution
 
@@ -684,15 +968,37 @@ class HistoricalQueryEngine:
                         + [last_v] * pad, np.int32)
         tks_d, tls_d, vs_d = map(jnp.asarray, (tks, tls, vs))
 
+        # Per-anchor reconstruction cache: a point group whose times
+        # repeat (or already sit in the LRU) reconstructs each unique
+        # time once — cache hits skip even that — and pays only the
+        # measures.  Same reconstruct + measure functions as the batch
+        # kernel, so results are bit-identical.
+        if (key.plan == "two_phase" and key.kind == "point"
+                and mode is None and not key.partial
+                and self.snap_cache_cap > 0):
+            uts = np.unique(tks[:b])
+            hits = sum((key.anchor_id, int(t), key.layout)
+                       in self._snap_cache for t in uts)
+            # worth it only when dedup at least halves the replays or
+            # the LRU already covers every time in the group — a stray
+            # single hit must not demote a large distinct-time batch to
+            # the sequential per-time loop
+            if 2 * len(uts) <= b or hits == len(uts):
+                return self._run_point_group_cached(key, b, tks, vs)
+
         # Replicated operand placement for batch-axis sharded groups
         # (cached on the engine; plain single-device arrays otherwise).
+        base_cur = (self.current_edge if key.layout == "edge"
+                    else self.current)
         if mode == "batch":
-            cur = self._replicated(mesh, "current", self.current)
+            cur_role = ("current_edge" if key.layout == "edge"
+                        else "current")
+            cur = self._replicated(mesh, cur_role, base_cur)
             dlt = self._replicated(mesh, "delta", self.delta)
             idx = (self._replicated(mesh, "index", self.index)
                    if self.index is not None else None)
         else:
-            cur, dlt, idx = self.current, self.delta, self.index
+            cur, dlt, idx = base_cur, self.delta, self.index
 
         # Build one dispatch descriptor: (kernel, static kwargs,
         # positional args, query-axis mask).  The same descriptor runs
@@ -737,7 +1043,7 @@ class HistoricalQueryEngine:
                 w_total = _pow2(int(tls[:b].max()) - t0 + 1)
                 w_q = _pow2(max(int(tl - tk) + 1
                                 for tk, tl in zip(tks[:b], tls[:b])))
-                if w_total * self.current.n_cap > self.series_budget:
+                if w_total * base_cur.n_cap > self.series_budget:
                     # one temporally-distant query would inflate the
                     # shared series to O(w_total · n_cap); fall back to
                     # per-node series (identical values, no n_cap term)
@@ -753,7 +1059,10 @@ class HistoricalQueryEngine:
                              self.t_cur),
                             (0, 0, 1, 1, 1, 0, 0))
         else:  # two_phase
-            t_anchor, g_anchor = self.selector.get(key.anchor_id)
+            if key.layout == "edge":
+                t_anchor, g_anchor = self.edge_anchor(key.anchor_id)
+            else:
+                t_anchor, g_anchor = self.selector.get(key.anchor_id)
             d = self._group_delta(
                 key, t_anchor,
                 np.concatenate([tks, tls]) if key.kind != "point" else tks)
@@ -770,15 +1079,49 @@ class HistoricalQueryEngine:
                     mesh, anchor_rows, d, t_anchor, tks_d, tls_d, vs_d,
                     kind=key.kind, measure=key.measure, agg=key.agg,
                     num_buckets=nb)
+            if mode == "slots":
+                from repro.core import distributed as D
+                anchor_slots = self._slot_sharded_anchor(mesh,
+                                                         key.anchor_id)
+                if d is self.delta:
+                    d = self._replicated(mesh, "delta", self.delta)
+                return D.two_phase_slots(
+                    mesh, anchor_slots, d, t_anchor, tks_d, tls_d, vs_d,
+                    kind=key.kind, measure=key.measure, agg=key.agg,
+                    num_buckets=nb)
             if mode == "batch":
                 # anchor -1 IS the current snapshot — share its cached
-                # placement instead of replicating the N² array twice
-                role = ("current" if key.anchor_id == -1
-                        else ("anchor", key.anchor_id))
+                # placement instead of replicating the array twice
+                if key.layout == "edge":
+                    role = ("current_edge" if key.anchor_id == -1
+                            else ("edge_anchor", key.anchor_id))
+                else:
+                    role = ("current" if key.anchor_id == -1
+                            else ("anchor", key.anchor_id))
                 g_anchor = self._replicated(mesh, role, g_anchor)
                 if d is self.delta:
                     d = self._replicated(mesh, "delta", self.delta)
-            if key.kind == "point":
+            if key.layout == "edge":
+                if key.kind == "point":
+                    desc = (batch_edge_two_phase_point,
+                            (("measure", key.measure),
+                             ("scope", key.scope)),
+                            (g_anchor, d, t_anchor, tks_d, vs_d),
+                            (0, 0, 0, 1, 1))
+                elif key.kind == "diff":
+                    desc = (batch_edge_two_phase_diff,
+                            (("measure", key.measure),
+                             ("scope", key.scope)),
+                            (g_anchor, d, t_anchor, tks_d, tls_d, vs_d),
+                            (0, 0, 0, 1, 1, 1))
+                else:
+                    desc = (batch_edge_two_phase_agg,
+                            (("measure", key.measure),
+                             ("scope", key.scope),
+                             ("num_buckets", nb), ("agg", key.agg)),
+                            (g_anchor, d, t_anchor, tks_d, tls_d, vs_d),
+                            (0, 0, 0, 1, 1, 1))
+            elif key.kind == "point":
                 desc = (batch_two_phase_point,
                         (("measure", key.measure), ("scope", key.scope),
                          ("use_partial", key.partial),
@@ -807,20 +1150,43 @@ class HistoricalQueryEngine:
             return D.batch_sharded(mesh, kernel, statics, args, qmask)
         return kernel(*args, **dict(statics))
 
+    def _run_point_group_cached(self, key: _GroupKey, b: int,
+                                tks: np.ndarray, vs: np.ndarray):
+        """Serve one two-phase point group through the per-anchor
+        reconstruction LRU: one LWW replay per *unique* query time
+        (cache hits skip even that), then one vmapped measure pass per
+        time.  Uses the same reconstruct/measure functions as the
+        batch kernel, so per-query values are bit-identical."""
+        uts, inv = np.unique(tks[:b], return_inverse=True)
+        out = None
+        for k, t in enumerate(uts):
+            sel = np.nonzero(inv == k)[0]
+            g = self.reconstruct_cached(key.anchor_id, int(t), key.layout)
+            m = batch_measure(g, jnp.asarray(vs[sel]),
+                              measure=key.measure, scope=key.scope)
+            if out is None:
+                out = jnp.zeros((b,), m.dtype)
+            out = out.at[jnp.asarray(sel)].set(m)
+        return out
+
     def evaluate_many(self, queries: Sequence[Query], plan: str = "auto",
                       *, indexed: bool | None = None,
                       partial_rows: bool | None = None,
                       windowed: bool | None = None,
+                      layout: str | None = None,
                       return_choices: bool = False,
                       mesh=None, shard: str = "auto"):
         """Evaluate B historical queries, grouped by (plan, anchor) and
         executed as one device program per group.
 
-        ``plan``/``indexed``/``partial_rows``/``windowed`` force the
-        planner's choice uniformly (same semantics as
+        ``plan``/``indexed``/``partial_rows``/``windowed``/``layout``
+        force the planner's choice uniformly (same semantics as
         ``plans.evaluate``); the default lets the cost model decide per
-        query.  Returns a list of scalars in query order (and the
-        per-query ``PlanChoice`` list when ``return_choices``).
+        query — ``layout`` picks between the dense N² adjacency and the
+        O(E) edge-slot registry (``"edge"`` falls back to dense per
+        query for measures without an edge implementation).  Returns a
+        list of scalars in query order (and the per-query
+        ``PlanChoice`` list when ``return_choices``).
 
         ``mesh`` (default: the engine's construction-time mesh) turns
         each large-enough group into one multi-device program —
@@ -831,17 +1197,23 @@ class HistoricalQueryEngine:
         fallback).
         """
         mesh = mesh if mesh is not None else self.mesh
-        choices = [self._resolve(q, plan, indexed, partial_rows, windowed)
+        choices = [self._resolve(q, plan, indexed, partial_rows, windowed,
+                                 layout)
                    for q in queries]
         groups: dict[_GroupKey, list[int]] = {}
         for i, (q, c) in enumerate(zip(queries, choices)):
             groups.setdefault(self._group_key(q, c), []).append(i)
         # Dispatch every group first (async), then fetch everything with
         # one device_get so transfers don't serialize the group programs.
-        self.last_group_stats = []
-        outs = [(idxs, self._run_group(key, [queries[i] for i in idxs],
-                                       mesh=mesh, shard=shard))
-                for key, idxs in groups.items()]
+        self.last_group_stats = GroupStats()
+        self._stats_active = True
+        try:
+            outs = [(idxs,
+                     self._run_group(key, [queries[i] for i in idxs],
+                                     mesh=mesh, shard=shard))
+                    for key, idxs in groups.items()]
+        finally:
+            self._stats_active = False
         fetched = jax.device_get([o for _, o in outs])
         results: list = [None] * len(queries)
         for (idxs, _), host in zip(outs, fetched):

@@ -119,11 +119,11 @@ def generate_ops(num_nodes: int, params: EvolutionParams,
 
 def build_store(num_nodes: int, params: EvolutionParams | None = None,
                 seed: int = 0, n_cap: int | None = None,
-                policy=None) -> TemporalGraphStore:
+                policy=None, layout: str = "dense") -> TemporalGraphStore:
     params = params or EvolutionParams()
     ops = generate_ops(num_nodes, params, seed)
     n_cap = n_cap or num_nodes
-    store = TemporalGraphStore(n_cap=n_cap, policy=policy)
+    store = TemporalGraphStore(n_cap=n_cap, policy=policy, layout=layout)
     t_max = max(o.t for o in ops)
     store.ingest(ops)
     store.advance_to(t_max)

@@ -102,6 +102,8 @@ class EdgeGraph:
         return jnp.sum(self.live_edges().astype(jnp.int32))
 
     def degrees(self) -> jax.Array:
+        """Degree of every node — a segment-sum over edge endpoints
+        (O(E + N), the edge-layout replacement for the dense row sum)."""
         live = self.live_edges()
         ones = live.astype(jnp.int32)
         deg = jnp.zeros((self.n_cap,), jnp.int32)
@@ -121,6 +123,16 @@ class EdgeGraph:
         adj = adj.at[self.ev, self.eu].max(live)
         return DenseGraph(nodes=self.nodes, adj=adj)
 
+    def with_registry_of(self, other: "EdgeGraph") -> "EdgeGraph":
+        """This snapshot's state re-expressed over ``other``'s (equal
+        or larger, append-only-grown) slot registry — host-side helper
+        for registry growth.  Slots registered after this snapshot's
+        time keep emask=False, which is exactly their state then."""
+        e = other.e_cap
+        emask = jnp.zeros((e,), bool).at[:self.e_cap].set(self.emask)
+        return EdgeGraph(nodes=self.nodes, eu=other.eu, ev=other.ev,
+                         emask=emask, n_edges_reg=other.n_edges_reg)
+
 
 def empty_dense(n_cap: int) -> DenseGraph:
     return DenseGraph(nodes=jnp.zeros((n_cap,), bool),
@@ -133,6 +145,29 @@ def empty_edge(n_cap: int, e_cap: int) -> EdgeGraph:
                      ev=jnp.zeros((e_cap,), jnp.int32),
                      emask=jnp.zeros((e_cap,), bool),
                      n_edges_reg=jnp.int32(0))
+
+
+def dense_to_edge(g: DenseGraph, registry: EdgeGraph) -> EdgeGraph:
+    """Re-express a dense snapshot in edge-slot layout over an existing
+    slot ``registry`` (the store's persistent ``(eu, ev)`` arrays).
+
+    ``emask[s] = adj[eu[s], ev[s]]`` for registered slots — slots whose
+    edge did not exist at the snapshot's time simply come out False, so
+    any registry that is a superset of the snapshot's edges (the
+    current registry always is, slots are append-only) converts any
+    historical snapshot exactly.  O(E) gathers, no N² traffic beyond
+    the E adjacency lookups.
+    """
+    live = (jnp.arange(registry.e_cap, dtype=jnp.int32)
+            < registry.n_edges_reg)
+    emask = g.adj[registry.eu, registry.ev] & live
+    return EdgeGraph(nodes=g.nodes, eu=registry.eu, ev=registry.ev,
+                     emask=emask, n_edges_reg=registry.n_edges_reg)
+
+
+def edge_to_dense(g: EdgeGraph) -> DenseGraph:
+    """Inverse of ``dense_to_edge`` (alias of ``EdgeGraph.to_dense``)."""
+    return g.to_dense()
 
 
 def dense_from_numpy(nodes: np.ndarray, edges: list[tuple[int, int]],

@@ -22,11 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.delta import ADD_EDGE, REM_EDGE, Delta
-from repro.core.graph import DenseGraph
+from repro.core.graph import DenseGraph, EdgeGraph
 from repro.core.index import NodeIndex, gather_node_ops, gather_window
 from repro.core.partial import partial_reconstruct, seed_mask
-from repro.core.queries import GLOBAL_MEASURES, NODE_MEASURES
+from repro.core.queries import (EDGE_GLOBAL_MEASURES, EDGE_NODE_MEASURES,
+                                GLOBAL_MEASURES, NODE_MEASURES)
 from repro.core.reconstruct import (node_degree_series, reconstruct_dense,
+                                    reconstruct_edge,
                                     reconstruct_sequential)
 
 Aggregate = Literal["mean", "min", "max"]
@@ -45,7 +47,11 @@ class Query:
     agg: Aggregate = "mean"
 
 
-def _measure(g: DenseGraph, q: Query):
+def _measure(g, q: Query):
+    if isinstance(g, EdgeGraph):
+        if q.scope == "node":
+            return EDGE_NODE_MEASURES[q.measure](g, q.v)
+        return EDGE_GLOBAL_MEASURES[q.measure](g)
     if q.scope == "node":
         return NODE_MEASURES[q.measure](g, q.v)
     return GLOBAL_MEASURES[q.measure](g)
@@ -66,24 +72,37 @@ def _aggregate(vals: jax.Array, agg: Aggregate):
 # ---------------------------------------------------------------------------
 
 
-def two_phase(current: DenseGraph, delta: Delta, t_cur, q: Query, *,
+def two_phase(current, delta: Delta, t_cur, q: Query, *,
               partial_rows: bool = False, sequential: bool = False,
               passes: int = 2):
-    """General plan, all query types.
+    """General plan, all query types, both snapshot layouts.
 
     ``sequential=True`` replays the paper's Algorithm 2 op-by-op (the
     faithful baseline); otherwise the vectorized LWW reconstruction.
     ``partial_rows=True`` enables partial reconstruction (§3.3.1) for
-    node-centric queries.
+    node-centric queries.  An ``EdgeGraph`` ``current`` runs the O(E)
+    slot-scatter reconstruction instead of the dense N² one
+    (sequential / partial variants are dense-layout concepts).
     """
-    def recon(t):
+    is_edge = isinstance(current, EdgeGraph)
+    if is_edge and (sequential or partial_rows):
+        raise ValueError("sequential / partial variants need the dense "
+                         "layout")
+
+    def recon_from(g, t_base, t):
+        if is_edge:
+            return reconstruct_edge(g, delta, t_base, t)
         if sequential:
-            return reconstruct_sequential(current, delta, t_cur, t)
-        if partial_rows and q.scope == "node":
+            return reconstruct_sequential(g, delta, t_base, t)
+        return reconstruct_dense(g, delta, t_base, t)
+
+    def recon(t):
+        if not is_edge and not sequential and partial_rows \
+                and q.scope == "node":
             return partial_reconstruct(current, delta, t_cur, t,
                                        seed_mask(current.n_cap, q.v),
                                        passes=passes)
-        return reconstruct_dense(current, delta, t_cur, t)
+        return recon_from(current, t_cur, t)
 
     if q.kind == "point":
         return _measure(recon(q.t_k), q)
@@ -94,10 +113,7 @@ def two_phase(current: DenseGraph, delta: Delta, t_cur, q: Query, *,
         # point-range plan does (§3.2.1), so the shared part of the delta
         # is applied once.
         g_l = recon(q.t_l)
-        if sequential:
-            g_k = reconstruct_sequential(g_l, delta, q.t_l, q.t_k)
-        else:
-            g_k = reconstruct_dense(g_l, delta, q.t_l, q.t_k)
+        g_k = recon_from(g_l, q.t_l, q.t_k)
         return jnp.abs(_measure(g_l, q) - _measure(g_k, q))
 
     # aggregate: one snapshot per time unit in [t_k, t_l]

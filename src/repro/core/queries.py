@@ -16,7 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import DenseGraph
+from repro.core.graph import DenseGraph, EdgeGraph
 
 INF = jnp.int32(0x3FFFFFFF)
 
@@ -202,3 +202,55 @@ GLOBAL_MEASURES = {
     "diameter": diameter,
     "triangles": triangle_count,
 }
+
+
+# ---------------------------------------------------------------------------
+# Edge-slot-layout measures (segment reductions — O(E + N), no N² state)
+# ---------------------------------------------------------------------------
+#
+# Each mirrors the dense measure's arithmetic exactly: the integer
+# counts are the same values, and the float finalizations are the same
+# f32 expressions of those integers, so edge-layout results bit-match
+# the dense layout (tests/test_engine.py, tests/test_property.py).
+
+
+def edge_degree(g: EdgeGraph, v) -> jax.Array:
+    return g.degree(v)
+
+
+def edge_num_nodes(g: EdgeGraph) -> jax.Array:
+    return g.num_nodes()
+
+
+def edge_num_edges(g: EdgeGraph) -> jax.Array:
+    # slots hold each undirected edge once — the popcount equals the
+    # dense sum(adj) // 2 exactly
+    return g.num_edges()
+
+
+def edge_density(g: EdgeGraph) -> jax.Array:
+    n = g.num_nodes().astype(jnp.float32)
+    e = g.num_edges().astype(jnp.float32)
+    return jnp.where(n > 1, 2.0 * e / (n * (n - 1.0)), 0.0)
+
+
+def edge_avg_degree(g: EdgeGraph) -> jax.Array:
+    n = jnp.maximum(g.num_nodes(), 1).astype(jnp.float32)
+    return 2.0 * g.num_edges().astype(jnp.float32) / n
+
+
+EDGE_NODE_MEASURES = {
+    "degree": edge_degree,
+}
+EDGE_GLOBAL_MEASURES = {
+    "num_nodes": edge_num_nodes,
+    "num_edges": edge_num_edges,
+    "density": edge_density,
+    "avg_degree": edge_avg_degree,
+}
+
+
+def edge_supported(measure: str, scope: str) -> bool:
+    """True iff the measure has an edge-slot-layout implementation."""
+    table = EDGE_NODE_MEASURES if scope == "node" else EDGE_GLOBAL_MEASURES
+    return measure in table

@@ -200,7 +200,7 @@ def reconstruct_sequential(anchor: DenseGraph, delta: Delta, t_anchor,
 
 
 @partial(jax.jit, static_argnames=("num_buckets",))
-def degree_series(current: DenseGraph, delta: Delta, t_k, t_l,
+def degree_series(current, delta: Delta, t_k, t_l,
                   num_buckets: int, t_cur) -> jax.Array:
     """Degree of every node at each time unit in [t_k, t_l].
 
@@ -208,6 +208,11 @@ def degree_series(current: DenseGraph, delta: Delta, t_k, t_l,
     correct backwards with per-bucket net edge counts — one pass over the
     delta.  Bucket b corresponds to time t_k + b; ``num_buckets`` must be
     ≥ t_l - t_k + 1 (extra buckets are computed but ignorable).
+
+    ``current`` is layout-polymorphic: only ``degrees()``/``n_cap`` are
+    read, so an ``EdgeGraph`` works too (its segment-sum degrees are
+    the same integers, keeping edge-layout hybrid results bit-identical
+    to dense ones) — the delta correction below never touches N² state.
 
     Returns i32[num_buckets, N]: row b = degrees at time t_k + b.
     """

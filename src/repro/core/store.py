@@ -25,11 +25,12 @@ from repro.core import queries as Q
 from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
                               T_PAD, Delta)
 from repro.core.engine import HistoricalQueryEngine
-from repro.core.graph import DenseGraph, EdgeGraph
+from repro.core.graph import (DenseGraph, EdgeGraph, dense_to_edge,
+                              empty_edge)
 from repro.core.index import NodeIndex, build_node_index_host
 from repro.core.materialize import (MaterializationPolicy, MaterializedStore)
 from repro.core.plans import Query, evaluate
-from repro.core.reconstruct import reconstruct_dense
+from repro.core.reconstruct import reconstruct_dense, reconstruct_edge
 
 
 @dataclasses.dataclass
@@ -45,7 +46,20 @@ class TemporalGraphStore:
 
     def __init__(self, n_cap: int, e_cap: int | None = None,
                  policy: MaterializationPolicy | None = None,
-                 enforce_invertible: bool = True):
+                 enforce_invertible: bool = True,
+                 layout: str = "dense"):
+        """``layout="edge"`` keeps the current snapshot in edge-slot
+        form only — O(E + N) state, no N² array anywhere in the store,
+        which is what lets graphs past ~10⁴ nodes fit.  Queries then
+        run through the engine's edge-layout kernels (measures without
+        an edge implementation are unavailable).  Materialization
+        policies need the dense layout (snapshots are stored dense)."""
+        if layout not in ("dense", "edge"):
+            raise ValueError(f"unknown layout {layout!r}")
+        if layout == "edge" and policy is not None:
+            raise ValueError("materialization policies need the dense "
+                             "layout")
+        self.layout = layout
         self.n_cap = n_cap
         self.e_cap = e_cap or 8 * n_cap
         self.t0 = 0
@@ -59,12 +73,20 @@ class TemporalGraphStore:
         # host mirrors of current state (for ingest-time legality checks)
         self._nodes = np.zeros((n_cap,), bool)
         self._adj_host: dict[tuple[int, int], bool] = {}
+        # persistent edge-slot registry, maintained incrementally on
+        # append: slot id -> canonical endpoints + current validity
         self._edge_slots: dict[tuple[int, int], int] = {}
+        self._eu_l: list[int] = []
+        self._ev_l: list[int] = []
+        self._emask_l: list[bool] = []
         self._next_edge_slot = 0
         self.enforce_invertible = enforce_invertible
-        # device-side current snapshot
-        self.current = DenseGraph(nodes=jnp.zeros((n_cap,), bool),
-                                  adj=jnp.zeros((n_cap, n_cap), bool))
+        # device-side current snapshot (layout-dependent)
+        if layout == "edge":
+            self.current: DenseGraph | EdgeGraph = empty_edge(n_cap, 1)
+        else:
+            self.current = DenseGraph(nodes=jnp.zeros((n_cap,), bool),
+                                      adj=jnp.zeros((n_cap, n_cap), bool))
         self.materialized = MaterializedStore()
         self.policy = policy
         self._ops_since_mat = 0
@@ -72,6 +94,7 @@ class TemporalGraphStore:
         self._delta_cache: Delta | None = None
         self._index_cache: NodeIndex | None = None
         self._engine_cache: HistoricalQueryEngine | None = None
+        self._edge_cache: EdgeGraph | None = None
 
     # ---------------------------------------------------------------- ingest
 
@@ -83,10 +106,18 @@ class TemporalGraphStore:
         if key not in self._edge_slots:
             self._edge_slots[key] = self._next_edge_slot
             self._next_edge_slot += 1
+            # registry arrays grow in lockstep (incremental, O(1))
+            self._eu_l.append(key[0])
+            self._ev_l.append(key[1])
+            self._emask_l.append(False)
         return self._edge_slots[key]
 
     def _append(self, op: int, u: int, v: int, t: int) -> None:
-        slot = u if op in (ADD_NODE, REM_NODE) else self._edge_slot(u, v)
+        if op in (ADD_NODE, REM_NODE):
+            slot = u
+        else:
+            slot = self._edge_slot(u, v)
+            self._emask_l[slot] = op == ADD_EDGE
         self._op_l.append(op)
         self._u_l.append(u)
         self._v_l.append(v)
@@ -163,6 +194,7 @@ class TemporalGraphStore:
         self._delta_cache = None
         self._index_cache = None
         self._engine_cache = None
+        self._edge_cache = None
         return n_acc
 
     def advance_to(self, t_next: int) -> None:
@@ -172,8 +204,15 @@ class TemporalGraphStore:
         assert t_next >= self.t_cur
         new_ops = int(np.sum(self._t > self.t_cur)) if len(self._t) else 0
         delta = self.delta()
-        self.current = reconstruct_dense(self.current, delta,
-                                         self.t_cur, t_next)
+        if self.layout == "edge":
+            # rebase the anchor onto the latest (append-only) registry
+            # first, so ops on newly registered slots land in range
+            anchor = self.current.with_registry_of(self.edge_graph())
+            self.current = reconstruct_edge(anchor, delta,
+                                            self.t_cur, t_next)
+        else:
+            self.current = reconstruct_dense(self.current, delta,
+                                             self.t_cur, t_next)
         self.t_cur = t_next
         self._engine_cache = None
         self._ops_since_mat += new_ops
@@ -218,20 +257,43 @@ class TemporalGraphStore:
         return self._index_cache
 
     def edge_graph(self) -> EdgeGraph:
-        """Current snapshot in edge-slot layout (for the distributed
-        engine)."""
-        e_cap = max(1, 1 << int(np.ceil(np.log2(max(self._next_edge_slot,
-                                                    1)))))
+        """The ingested state in edge-slot layout: the persistent slot
+        registry (eu, ev — append-only, maintained incrementally) plus
+        the host-mirror edge/node validity.  Cached; O(E) vectorized
+        rebuild after an ingest (e_cap rounds to a power of two so jit
+        shapes — and slot-shard divisibility — are stable)."""
+        if self._edge_cache is not None:
+            return self._edge_cache
+        n = self._next_edge_slot
+        e_cap = max(1, 1 << int(np.ceil(np.log2(max(n, 1)))))
         eu = np.zeros((e_cap,), np.int32)
         ev = np.zeros((e_cap,), np.int32)
         emask = np.zeros((e_cap,), bool)
-        for (a, b), s in self._edge_slots.items():
-            eu[s], ev[s] = a, b
-            emask[s] = bool(self._adj_host.get((a, b), False))
-        return EdgeGraph(nodes=jnp.asarray(self._nodes.copy()),
-                         eu=jnp.asarray(eu), ev=jnp.asarray(ev),
-                         emask=jnp.asarray(emask),
-                         n_edges_reg=jnp.int32(self._next_edge_slot))
+        eu[:n] = self._eu_l
+        ev[:n] = self._ev_l
+        emask[:n] = self._emask_l
+        self._edge_cache = EdgeGraph(
+            nodes=jnp.asarray(self._nodes.copy()),
+            eu=jnp.asarray(eu), ev=jnp.asarray(ev),
+            emask=jnp.asarray(emask), n_edges_reg=jnp.int32(n))
+        return self._edge_cache
+
+    def current_edge_snapshot(self) -> EdgeGraph:
+        """SG_tcur in edge-slot layout, guaranteed consistent with
+        ``self.current`` (the engine's parity contract): derived from
+        the dense current through the registry for dense-layout stores,
+        the (registry-rebased) current itself for edge-layout ones."""
+        reg = self.edge_graph()
+        if isinstance(self.current, EdgeGraph):
+            # rebase whenever slots were registered since the snapshot
+            # was built — e_cap alone can stay put below the next pow2
+            # boundary while the registration count (and eu/ev of the
+            # new slots) moved on
+            if (int(self.current.n_edges_reg) < self._next_edge_slot
+                    or self.current.e_cap < reg.e_cap):
+                return self.current.with_registry_of(reg)
+            return self.current
+        return dense_to_edge(self.current, reg)
 
     # ---------------------------------------------------------------- query
 
@@ -251,22 +313,33 @@ class TemporalGraphStore:
 
         Anchor choice (current snapshot competing with every
         materialized one) is delegated to the engine's
-        ``AnchorSelector``.
+        ``AnchorSelector``.  Unwindowed calls route through the
+        engine's per-anchor reconstruction LRU, so repeated snapshots
+        at hot timestamps skip the delta replay
+        (``engine.cache_hits``/``cache_misses`` count them).  An
+        edge-layout store returns an ``EdgeGraph``.
         """
         delta = self.delta()
+        anchor_id = -1
         if use_materialized and self.materialized.times:
             selector = self.engine().selector
             cand = selector.select(t, delta, method=selection)
-            t_a, g_a = selector.get(cand.anchor_id)
+            anchor_id = cand.anchor_id
+            t_a, g_a = selector.get(anchor_id)
         else:
             t_a, g_a = self.t_cur, self.current
-        if windowed:
-            from repro.core.index import count_window_ops, gather_window
-            n_win = int(count_window_ops(delta, min(t, t_a), max(t, t_a)))
-            cap = max(64, 1 << int(np.ceil(np.log2(max(n_win, 1)))))
-            if cap < delta.capacity:
-                delta = gather_window(delta, min(t, t_a), max(t, t_a),
-                                      cap)
+        if not windowed:
+            return self.engine().reconstruct_cached(anchor_id, t,
+                                                    layout=self.layout)
+        from repro.core.index import count_window_ops, gather_window
+        n_win = int(count_window_ops(delta, min(t, t_a), max(t, t_a)))
+        cap = max(64, 1 << int(np.ceil(np.log2(max(n_win, 1)))))
+        if cap < delta.capacity:
+            delta = gather_window(delta, min(t, t_a), max(t, t_a), cap)
+        if self.layout == "edge":
+            return reconstruct_edge(self.current_edge_snapshot()
+                                    if anchor_id == -1 else g_a,
+                                    delta, t_a, t)
         return reconstruct_dense(g_a, delta, t_a, t)
 
     def engine(self, *, indexed: bool = False,
@@ -303,16 +376,23 @@ class TemporalGraphStore:
     def place_on_mesh(self, mesh) -> HistoricalQueryEngine:
         """Eagerly place the store's device state for multi-device
         serving: the interval delta replicated and the current snapshot
-        both replicated (batch-axis groups) and row-sharded (two-phase
-        groups), so the first queries pay no placement transfers.
-        Returns the mesh-bound engine (also cached as ``engine()``)."""
+        both replicated (batch-axis groups) and row/slot-sharded
+        (two-phase groups, per layout), so the first queries pay no
+        placement transfers.  Returns the mesh-bound engine (also
+        cached as ``engine()``)."""
         eng = self.engine(mesh=mesh)
-        from repro.sharding.graph import rows_divisible, single_device
+        from repro.sharding.graph import (rows_divisible, single_device,
+                                          slots_divisible)
         if not single_device(mesh):
             eng._replicated(mesh, "delta", eng.delta)
-            eng._replicated(mesh, "current", eng.current)
-            if rows_divisible(self.n_cap, mesh):
-                eng._row_sharded_anchor(mesh, -1)
+            if eng.current is not None:
+                eng._replicated(mesh, "current", eng.current)
+                if rows_divisible(self.n_cap, mesh):
+                    eng._row_sharded_anchor(mesh, -1)
+            if eng.current_edge is not None:
+                eng._replicated(mesh, "current_edge", eng.current_edge)
+                if slots_divisible(eng.current_edge.e_cap, mesh):
+                    eng._slot_sharded_anchor(mesh, -1)
         return eng
 
     def query(self, q: Query, plan: str = "auto", indexed: bool = False,
@@ -324,17 +404,25 @@ class TemporalGraphStore:
             # device transfer per query
             plan = self.engine().planner.choose(q, self.delta(),
                                                 self.t_cur).plan
-        return evaluate(self.current, self.delta(), self.t_cur, q,
+        # edge layout: evaluate against the registry-rebased snapshot —
+        # self.current may predate slots registered by a later ingest,
+        # whose ops would fall outside its (stale) slot range
+        cur = (self.current_edge_snapshot() if self.layout == "edge"
+               else self.current)
+        return evaluate(cur, self.delta(), self.t_cur, q,
                         index=index, plan=plan, **kw)
 
     def evaluate_many(self, queries, plan: str = "auto", *,
-                      indexed: bool = False, mesh=None, **kw):
+                      indexed: bool = False, mesh=None,
+                      layout: str | None = None, **kw):
         """Batched multi-query serving: route through the engine's
-        grouped executor (one device program per (plan, anchor) group;
-        one *sharded* program per big group when ``mesh`` spans more
-        than one device)."""
+        grouped executor (one device program per (plan, anchor, layout)
+        group; one *sharded* program per big group when ``mesh`` spans
+        more than one device).  ``layout`` forces dense/edge execution
+        ("auto"/None lets the planner's N²-vs-E cost term decide)."""
         return self.engine(indexed=indexed, mesh=mesh).evaluate_many(
-            queries, plan, indexed=True if indexed else None, **kw)
+            queries, plan, indexed=True if indexed else None,
+            layout=layout, **kw)
 
     # stats used by benchmarks (paper Table 3)
     def stats(self) -> dict:

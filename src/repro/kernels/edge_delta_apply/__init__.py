@@ -1,0 +1,10 @@
+from repro.kernels.edge_delta_apply.edge_delta_apply import (
+    edge_delta_apply_tiles)
+from repro.kernels.edge_delta_apply.ops import (bucket_slot_ops,
+                                               edge_delta_apply,
+                                               edge_delta_apply_slot_block)
+from repro.kernels.edge_delta_apply.ref import edge_delta_apply_ref
+
+__all__ = ["edge_delta_apply", "edge_delta_apply_ref",
+           "edge_delta_apply_tiles", "edge_delta_apply_slot_block",
+           "bucket_slot_ops"]

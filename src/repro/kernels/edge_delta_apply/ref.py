@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for edge_delta_apply: scatter-argmin/argmax LWW
+over slots (independent of ``core.reconstruct.reconstruct_edge`` so
+kernel tests cross-check two formulations)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import ADD_EDGE, ADD_NODE, Delta
+from repro.core.graph import EdgeGraph
+
+
+@jax.jit
+def edge_delta_apply_ref(anchor: EdgeGraph, delta: Delta, t_anchor,
+                         t_query) -> EdgeGraph:
+    e = anchor.e_cap
+    m = delta.capacity
+    forward = t_query >= t_anchor
+    t_lo = jnp.minimum(t_anchor, t_query)
+    t_hi = jnp.maximum(t_anchor, t_query)
+    in_win = delta.window_mask(t_lo, t_hi) & delta.valid_mask()
+    idx = jnp.arange(m, dtype=jnp.int32)
+
+    ew = in_win & delta.is_edge_op()
+    first = jnp.full((e,), m, jnp.int32).at[delta.slot].min(
+        jnp.where(ew, idx, m))
+    last = jnp.full((e,), -1, jnp.int32).at[delta.slot].max(
+        jnp.where(ew, idx, -1))
+    dec_f = last >= 0
+    val_f = delta.op[jnp.clip(last, 0)] == ADD_EDGE
+    dec_b = first < m
+    val_b = delta.op[jnp.clip(first, None, m - 1)] != ADD_EDGE
+    dec = jnp.where(forward, dec_f, dec_b)
+    val = jnp.where(forward, val_f, val_b)
+    emask = jnp.where(dec, val, anchor.emask)
+
+    nw = in_win & delta.is_node_op()
+    n = anchor.n_cap
+    firstn = jnp.full((n,), m, jnp.int32).at[delta.u].min(
+        jnp.where(nw, idx, m))
+    lastn = jnp.full((n,), -1, jnp.int32).at[delta.u].max(
+        jnp.where(nw, idx, -1))
+    dec_n = jnp.where(forward, lastn >= 0, firstn < m)
+    val_n = jnp.where(forward,
+                      delta.op[jnp.clip(lastn, 0)] == ADD_NODE,
+                      delta.op[jnp.clip(firstn, None, m - 1)] != ADD_NODE)
+    nodes = jnp.where(dec_n, val_n, anchor.nodes)
+    return dataclasses.replace(anchor, nodes=nodes, emask=emask)

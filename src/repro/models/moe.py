@@ -135,7 +135,11 @@ def _local_moe(x_loc, wg, w_up, w_gate, w_down, *, cfg: ModelConfig,
     if ep_axes:
         idx = jnp.int32(0)
         for ax in ep_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            # jax.lax.axis_size is ≥ 0.5; psum(1) is the portable form
+            size = (jax.lax.axis_size(ax)
+                    if hasattr(jax.lax, "axis_size")
+                    else jax.lax.psum(1, ax))
+            idx = idx * size + jax.lax.axis_index(ax)
         e0 = idx * e_loc
     else:
         e0 = jnp.int32(0)
@@ -179,9 +183,9 @@ def apply_moe_sharded(p: dict, x: jax.Array, cfg: ModelConfig):
         from jax.experimental.shard_map import shard_map
 
     from jax.sharding import PartitionSpec as P
-    from repro.sharding import _mesh_axis_sizes, resolve
+    from repro.sharding import _mesh_axis_sizes, current_mesh, resolve
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     sizes = _mesh_axis_sizes()
     b, s, d = x.shape
     e = cfg.n_experts
@@ -209,10 +213,14 @@ def apply_moe_sharded(p: dict, x: jax.Array, cfg: ModelConfig):
                 P(ep if ep else None, ff if ff else None, None))
     fn = partial(_local_moe, cfg=cfg, e_loc=e_loc, ep_axes=ep,
                  red_axes=red)
-    out = shard_map(fn, mesh=mesh, in_specs=in_specs,
-                    out_specs=P(dp if dp else None, None),
-                    check_vma=False)(
-        x.reshape(b * s, d), p["wg"], p["w_up"], w_gate, p["w_down"])
+    out_specs = P(dp if dp else None, None)
+    try:
+        sm = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax ≤ 0.4 spells the flag check_rep
+        sm = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    out = sm(x.reshape(b * s, d), p["wg"], p["w_up"], w_gate, p["w_down"])
     return out.reshape(b, s, d)
 
 

@@ -35,10 +35,13 @@ LOGICAL_RULES: dict[str, tuple[str, ...]] = {
 
 def mesh_context(mesh):
     """Context manager putting ``mesh`` in scope for PartitionSpec
-    resolution (jax.set_mesh in jax ≥ 0.7, use_mesh before)."""
+    resolution (jax.set_mesh in jax ≥ 0.7, use_mesh in 0.5–0.6, the
+    plain ``Mesh`` context manager before that)."""
     if hasattr(jax, "set_mesh"):
         return jax.set_mesh(mesh)
-    return jax.sharding.use_mesh(mesh)  # pragma: no cover
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)  # pragma: no cover
+    return mesh  # jax ≤ 0.4: ``with mesh:`` sets thread_resources
 
 
 @contextlib.contextmanager
@@ -52,11 +55,28 @@ def logical_rules(**over):
         LOGICAL_RULES.update(old)
 
 
+def current_mesh():
+    """The mesh in scope: the abstract mesh on jax ≥ 0.5, the physical
+    thread-resources mesh (set by ``with mesh:``) before."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+    mesh = thread_resources.env.physical_mesh
+    return None if mesh is None or mesh.empty else mesh
+
+
 def _mesh_axis_sizes() -> dict[str, int]:
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return {}
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    # jax ≤ 0.4: the mesh context manager sets thread_resources instead
+    from jax._src.mesh import thread_resources
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
         return {}
-    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return dict(mesh.shape)
 
 
 def resolve(logical: str | None, dim: int | None = None,

@@ -59,6 +59,13 @@ def rows_divisible(n_cap: int, mesh: Mesh | None) -> bool:
     return mesh is not None and n_cap % mesh_size(mesh) == 0
 
 
+def slots_divisible(e_cap: int, mesh: Mesh | None) -> bool:
+    """Slot-sharding needs the edge-slot capacity to split evenly
+    (e_cap is a power of two from the store, so any pow2 device count
+    divides it)."""
+    return mesh is not None and e_cap % mesh_size(mesh) == 0
+
+
 def replicate(tree, mesh: Mesh):
     """Place a pytree fully replicated on the mesh."""
     return jax.device_put(tree, NamedSharding(mesh, P()))
@@ -73,6 +80,23 @@ def shard_rows(tree, mesh: Mesh):
         return jax.device_put(x, NamedSharding(mesh, spec))
 
     return jax.tree.map(put, tree)
+
+
+def shard_slots(g, mesh: Mesh):
+    """Place an edge-layout snapshot with the *slot axis* sharded: the
+    E-sized fields (eu, ev, emask) split over the mesh, everything
+    N-sized or scalar (nodes, n_edges_reg) replicated.  The 1-D
+    analogue of ``shard_rows`` for ``core.distributed.two_phase_slots``.
+    """
+    import dataclasses
+
+    def split(x):
+        return jax.device_put(x, NamedSharding(mesh, P(AXIS)))
+
+    rep = replicate((g.nodes, g.n_edges_reg), mesh)
+    return dataclasses.replace(g, nodes=rep[0], n_edges_reg=rep[1],
+                               eu=split(g.eu), ev=split(g.ev),
+                               emask=split(g.emask))
 
 
 def batch_specs(qmask) -> tuple:

@@ -347,3 +347,228 @@ def test_store_query_auto_routes_through_planner(small_history):
                t_l=_ts(store, 0.8), v=9)
     assert _item(store.query(q2)) == abs(bf.degree(9, _ts(store, 0.8))
                                          - bf.degree(9, _ts(store, 0.3)))
+
+
+# ---------------------------------------------------------------------------
+# Edge-slot layout: dense↔edge bit parity + planner layout choice
+# ---------------------------------------------------------------------------
+
+
+def _edge_safe_matrix(store):
+    """The query-matrix cells whose measures have an edge-layout
+    implementation (degree + the slot-decomposable globals)."""
+    from repro.core.queries import edge_supported
+    return [q for q in _query_matrix(store)
+            if edge_supported(q.measure, q.scope)]
+
+
+def test_edge_layout_bit_parity_all_kinds(small_history):
+    """Forced edge layout == forced dense layout, bit for bit, for
+    every supported (kind, scope, measure) cell and every plan."""
+    store, _ = small_history
+    eng = _engine(store)
+    qs = _edge_safe_matrix(store)
+    dense = [_item(r) for r in eng.evaluate_many(qs, plan="two_phase",
+                                                 layout="dense")]
+    edge = [_item(r) for r in eng.evaluate_many(qs, plan="two_phase",
+                                                layout="edge")]
+    assert edge == dense
+    assert all(k.layout == "edge" for k, _, _ in eng.last_group_stats)
+    # hybrid / delta-only edge variants (degree-specialised kernels
+    # reading the snapshot only through degrees) bit-match too
+    deg = [q for q in qs if q.scope == "node" and q.measure == "degree"]
+    for plan, sub in (("hybrid", deg),
+                      ("delta_only",
+                       [q for q in deg if q.kind == "diff"])):
+        d = [_item(r) for r in eng.evaluate_many(sub, plan=plan,
+                                                 layout="dense")]
+        e = [_item(r) for r in eng.evaluate_many(sub, plan=plan,
+                                                 layout="edge")]
+        assert e == d, plan
+
+
+def test_edge_layout_unsupported_measure_falls_back(small_history):
+    """layout='edge' on a measure without an edge implementation falls
+    back to dense per query (mirroring forced-plan fallbacks)."""
+    store, _ = small_history
+    eng = _engine(store)
+    q = Query("point", "node", "neighborhood2",
+              t_k=store.t_cur // 3, v=5)
+    ref = _item(eng.evaluate_many([q], layout="dense")[0])
+    got = _item(eng.evaluate_many([q], layout="edge")[0])
+    assert got == ref
+    assert eng.last_group_stats[0][0].layout == "dense"
+
+
+def test_edge_layout_materialized_anchor_parity(small_history):
+    """dense_to_edge anchor conversion is exact: edge groups anchored
+    at a materialized (dense) snapshot still bit-match."""
+    store, _ = small_history
+    t_mid = store.t_cur // 2
+    store.materialized.add(t_mid, store.snapshot_at(
+        t_mid, use_materialized=False))
+    store._engine_cache = None
+    try:
+        eng = _engine(store)
+        qs = [Query("point", "global", "num_edges", t_k=t_mid - 1),
+              Query("point", "node", "degree", t_k=t_mid + 1, v=7)]
+        dense, choices = eng.evaluate_many(qs, plan="two_phase",
+                                           layout="dense",
+                                           return_choices=True)
+        assert any(c.anchor_id != -1 for c in choices)
+        edge = eng.evaluate_many(qs, plan="two_phase", layout="edge")
+        assert [_item(r) for r in edge] == [_item(r) for r in dense]
+    finally:
+        store.materialized.times.clear()
+        store.materialized.snapshots.clear()
+        store._engine_cache = None
+
+
+def test_planner_layout_cost_term(small_history):
+    """The N²-vs-E term: global two-phase prefers the slot scatter when
+    E ≪ N²; an engine without a slot registry stays dense; an
+    edge-only engine routes everything edge."""
+    store, _ = small_history
+    eng = _engine(store)
+    pl = eng.planner
+    q_glob = Query("point", "global", "num_edges", t_k=store.t_cur // 2)
+    assert pl.layout_for(q_glob, "two_phase") == "edge"
+    assert pl.layout_for(q_glob, "hybrid") == "dense"
+    # e_cap dominating the dense scatter → dense wins
+    from repro.core.engine import HistoricalQueryEngine
+    pl2 = type(pl)(pl.selector, n_cap=pl.n_cap, e_cap=pl.n_cap ** 2,
+                   dense_available=True, edge_available=True)
+    assert pl2.layout_for(q_glob, "two_phase") == "dense"
+    # no registry → dense; no dense state → edge
+    pl3 = type(pl)(pl.selector, n_cap=pl.n_cap)
+    assert pl3.layout_for(q_glob, "two_phase") == "dense"
+    eng_e = HistoricalQueryEngine(
+        None, store.delta(), store.t_cur,
+        current_edge=store.current_edge_snapshot())
+    assert eng_e.planner.layout_for(q_glob, "two_phase") == "edge"
+    got = _item(eng_e.evaluate_many([q_glob])[0])
+    assert got == _item(eng.evaluate_many([q_glob], layout="dense")[0])
+
+
+def test_edge_layout_store_end_to_end(small_history):
+    """A layout='edge' store (no N² array anywhere) serves the
+    edge-supported measures with values equal to the dense store."""
+    from repro.core.graph import EdgeGraph
+    from repro.core.store import Op, TemporalGraphStore
+    store, bf = small_history
+    acc = [Op(int(o), int(u), int(v), int(t)) for o, u, v, t in
+           zip(store._op, store._u, store._v, store._t)]
+    es = TemporalGraphStore(n_cap=store.n_cap, layout="edge",
+                            enforce_invertible=False)
+    es.ingest(acc)
+    es.advance_to(store.t_cur)
+    assert isinstance(es.current, EdgeGraph)
+    t = max(1, store.t_cur // 2)
+    qs = [Query("point", "node", "degree", t_k=t, v=5),
+          Query("point", "global", "num_edges", t_k=t),
+          Query("diff", "node", "degree", t_k=t // 2, t_l=t, v=9),
+          Query("agg", "node", "degree", t_k=t, t_l=t + 4, v=3,
+                agg="mean")]
+    got = es.evaluate_many(qs)
+    ref = store.evaluate_many(qs, layout="dense")
+    assert [_item(a) for a in got] == [_item(b) for b in ref]
+    # snapshot_at returns the edge layout; its dense projection matches
+    g = es.snapshot_at(t)
+    assert isinstance(g, EdgeGraph)
+    assert np.array_equal(np.asarray(g.to_dense().adj), bf.adj(t))
+
+
+# ---------------------------------------------------------------------------
+# Per-anchor reconstruction cache
+# ---------------------------------------------------------------------------
+
+
+def test_reconstruction_cache_hits_and_parity(small_history):
+    """Repeated point queries at hot timestamps hit the per-anchor LRU
+    (counters exposed in last_group_stats) and keep bit parity."""
+    store, _ = small_history
+    eng = _engine(store)
+    eng._snap_cache.clear()
+    tc = store.t_cur
+    hot = [Query("point", "global", "num_edges", t_k=tc // 2)] * 6 + \
+          [Query("point", "node", "degree", t_k=tc // 2, v=5)] * 6
+    ref = [_item(r) for r in eng.evaluate_many(
+        hot, plan="two_phase", layout="dense")]
+    s1 = eng.last_group_stats
+    assert s1.cache_misses >= 1
+    got = [_item(r) for r in eng.evaluate_many(
+        hot, plan="two_phase", layout="dense")]
+    s2 = eng.last_group_stats
+    assert got == ref
+    assert s2.cache_hits >= 1 and s2.cache_misses == 0
+    # engine-lifetime counters accumulate
+    assert eng.cache_hits >= s2.cache_hits
+    # the cached path serves each unique time once per (measure) group
+    assert len(s2) == 2
+
+
+def test_reconstruction_cache_lru_eviction(small_history):
+    store, _ = small_history
+    eng = _engine(store)
+    eng._snap_cache.clear()
+    cap = eng.snap_cache_cap
+    for t in range(1, cap + 4):
+        eng.reconstruct_cached(-1, t)
+    assert len(eng._snap_cache) == cap
+    # oldest entries evicted, newest retained
+    assert (-1, 1, "dense") not in eng._snap_cache
+    assert (-1, cap + 3, "dense") in eng._snap_cache
+
+
+def test_snapshot_at_routes_through_cache(small_history):
+    store, _ = small_history
+    eng = store.engine()
+    eng._snap_cache.clear()
+    h0, m0 = eng.cache_hits, eng.cache_misses
+    a = store.snapshot_at(store.t_cur // 3)
+    b = store.snapshot_at(store.t_cur // 3)
+    assert eng.cache_misses == m0 + 1 and eng.cache_hits == h0 + 1
+    assert bool(np.all(np.asarray(a.adj) == np.asarray(b.adj)))
+
+
+def test_edge_store_ingest_after_advance_sees_new_slots():
+    """Slots registered after the edge current was built — without
+    crossing a pow2 e_cap boundary — must still be visible: both the
+    engine path and store.query rebase onto the latest registry."""
+    from repro.core.delta import ADD_EDGE, ADD_NODE
+    from repro.core.store import Op, TemporalGraphStore
+    for n_slots in (3, 4):   # same-pow2 and boundary-crossing growth
+        es = TemporalGraphStore(n_cap=8, layout="edge")
+        ops = [Op(ADD_NODE, i, i, 1) for i in range(5)]
+        ops += [Op(ADD_EDGE, 0, i + 1, 2) for i in range(n_slots)]
+        es.ingest(ops)
+        es.advance_to(3)
+        # new slot registered by a later ingest, no advance_to yet
+        es.ingest([Op(ADD_EDGE, 1, 4, 5)])
+        q = Query("point", "global", "num_edges", t_k=5)
+        assert _item(es.evaluate_many([q])[0]) == n_slots + 1, n_slots
+        assert _item(es.query(q, plan="two_phase")) == n_slots + 1, \
+            n_slots
+
+
+def test_cache_path_not_taken_for_large_distinct_time_groups(
+        small_history):
+    """A stray LRU hit must not demote a distinct-time point batch to
+    the sequential per-time loop: with unique times > b/2 and not all
+    cached, the vmapped batch kernel runs (one group stat, no new
+    cache insertions)."""
+    store, _ = small_history
+    eng = _engine(store)
+    eng._snap_cache.clear()
+    tc = store.t_cur
+    ts = list(range(1, min(tc, 17)))
+    eng.reconstruct_cached(-1, ts[0])          # seed one stray hit
+    size_before = len(eng._snap_cache)
+    qs = [Query("point", "node", "degree", t_k=t, v=3) for t in ts]
+    ref = [_item(r) for r in eng.evaluate_many(
+        qs, plan="two_phase", layout="dense")]
+    assert eng.last_group_stats.cache_misses == 0
+    assert len(eng._snap_cache) == size_before
+    # and the values still match per-query evaluation
+    single = [_item(store.query(q, plan="two_phase")) for q in qs]
+    assert ref == single

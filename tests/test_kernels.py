@@ -117,6 +117,119 @@ class TestDeltaApply:
         assert bool(jnp.all(jnp.concatenate(nodes) == ref.nodes))
 
 
+class TestEdgeDeltaApply:
+    """Slot-space LWW kernel: oracle parity, direction sweep, the
+    reconstruct_edge cross-check, overflow, and slot-block shard
+    safety (the contract the slot-sharded mesh relies on)."""
+
+    @pytest.mark.parametrize("tile", [32, 64, 128])
+    def test_backward_sweep(self, kstore, tile):
+        from repro.kernels.edge_delta_apply import (edge_delta_apply,
+                                                    edge_delta_apply_ref)
+        d = kstore.delta()
+        cur = kstore.current_edge_snapshot()
+        for tq in [0, kstore.t_cur // 2, kstore.t_cur]:
+            g, ovf = edge_delta_apply(cur, d, kstore.t_cur, tq,
+                                      tile=tile, cap=2048)
+            ref = edge_delta_apply_ref(cur, d, kstore.t_cur, tq)
+            assert not bool(ovf)
+            assert bool(jnp.all(g.emask == ref.emask)), (tile, tq)
+            assert bool(jnp.all(g.nodes == ref.nodes)), (tile, tq)
+
+    def test_forward(self, kstore):
+        from repro.kernels.edge_delta_apply import (edge_delta_apply,
+                                                    edge_delta_apply_ref)
+        d = kstore.delta()
+        cur = kstore.current_edge_snapshot()
+        t_a = 5
+        anchor = edge_delta_apply_ref(cur, d, kstore.t_cur, t_a)
+        g, ovf = edge_delta_apply(anchor, d, t_a, kstore.t_cur, tile=64,
+                                  cap=2048)
+        assert not bool(ovf)
+        assert bool(jnp.all(g.emask == cur.emask))
+
+    def test_matches_core_and_dense(self, kstore):
+        """Kernel == reconstruct_edge, and its dense projection ==
+        reconstruct_dense — the layout-equivalence triangle."""
+        from repro.core.reconstruct import reconstruct_edge
+        from repro.kernels.edge_delta_apply import edge_delta_apply
+        d = kstore.delta()
+        cur = kstore.current_edge_snapshot()
+        tq = kstore.t_cur // 3
+        g, _ = edge_delta_apply(cur, d, kstore.t_cur, tq, tile=64,
+                                cap=2048)
+        rr = reconstruct_edge(cur, d, kstore.t_cur, tq)
+        assert bool(jnp.all(g.emask == rr.emask))
+        dense = reconstruct_dense(kstore.current, d, kstore.t_cur, tq)
+        assert bool(jnp.all(g.to_dense().adj == dense.adj))
+        assert bool(jnp.all(g.nodes == dense.nodes))
+
+    def test_overflow_flag(self, kstore):
+        from repro.kernels.edge_delta_apply import edge_delta_apply
+        d = kstore.delta()
+        cur = kstore.current_edge_snapshot()
+        _, ovf = edge_delta_apply(cur, d, kstore.t_cur, 0, tile=512,
+                                  cap=8)
+        assert bool(ovf)
+
+    @pytest.mark.parametrize("n_shards", [2, 4])
+    def test_slot_blocks_concatenate_to_full(self, kstore, n_shards):
+        from repro.core.reconstruct import reconstruct_edge
+        from repro.kernels.edge_delta_apply import (
+            edge_delta_apply_slot_block)
+        d = kstore.delta()
+        cur = kstore.current_edge_snapshot()
+        e = cur.e_cap
+        w = e // n_shards
+        for tq in [0, kstore.t_cur // 2]:
+            ref = reconstruct_edge(cur, d, kstore.t_cur, tq)
+            masks = []
+            for slot0 in range(0, e, w):
+                nb, em, ovf = edge_delta_apply_slot_block(
+                    cur.nodes, cur.emask[slot0:slot0 + w], d,
+                    kstore.t_cur, tq, slot0, tile=32, cap=2048)
+                assert not bool(ovf)
+                masks.append(em)
+                assert bool(jnp.all(nb == ref.nodes))
+            assert bool(jnp.all(jnp.concatenate(masks) == ref.emask)), \
+                (n_shards, tq)
+
+    def test_slot_block_pad_band_excludes_next_shard(self, kstore):
+        """A block whose slot count is not a tile multiple pads up to
+        the tile — ops owned by the NEXT shard must not leak into the
+        pad band, and a non-uniform split must still stitch exactly."""
+        from repro.core.delta import delta_from_numpy
+        from repro.core.reconstruct import reconstruct_edge
+        from repro.kernels.edge_delta_apply import (
+            bucket_slot_ops, edge_delta_apply_slot_block)
+        # crafted log: 30 edge ops all on slot 50, which belongs to the
+        # SECOND shard of a (0..48, 48..e) split; shard 1's pad band
+        # covers slots 48..63 and must stay empty
+        k = 30
+        ops = np.full(k, 2, np.int32)                       # ADD_EDGE
+        us = np.zeros(k, np.int32)
+        vs = np.arange(1, k + 1, dtype=np.int32)
+        d50 = delta_from_numpy(ops, us, vs, np.full(k, 50, np.int32),
+                               np.arange(1, k + 1, dtype=np.int32))
+        blocks, ovf = bucket_slot_ops(d50, 64, 0, k, 32, 8, True,
+                                      slot0=0, n_valid_slots=48)
+        assert not bool(ovf)
+        assert int(jnp.sum(blocks[..., 2])) == 0   # nothing bucketed
+        # and the real-store non-uniform split stitches bit-exactly
+        d = kstore.delta()
+        cur = kstore.current_edge_snapshot()
+        tq = kstore.t_cur // 2
+        ref = reconstruct_edge(cur, d, kstore.t_cur, tq)
+        masks = []
+        for slot0, scount in ((0, 48), (48, cur.e_cap - 48)):
+            _, em, ovf = edge_delta_apply_slot_block(
+                cur.nodes, cur.emask[slot0:slot0 + scount], d,
+                kstore.t_cur, tq, slot0, tile=32, cap=2048)
+            assert not bool(ovf), (slot0, scount)
+            masks.append(em)
+        assert bool(jnp.all(jnp.concatenate(masks) == ref.emask))
+
+
 class TestDegreeSeries:
     @pytest.mark.parametrize("tile,buckets", [(32, 8), (64, 16), (128, 5)])
     def test_sweep(self, kstore, tile, buckets):

@@ -105,3 +105,30 @@ def test_store_consistency(ops):
     edges only between live nodes)."""
     store = _build(ops)
     assert bool(store.current.validate())
+
+
+@given(histories(), st.integers(min_value=0, max_value=100),
+       st.integers(min_value=0, max_value=N - 1))
+@settings(max_examples=20, deadline=None)
+def test_dense_edge_layout_query_parity(ops, t_raw, v):
+    """Random legal delta + random query → bit-identical results under
+    forced dense and forced edge execution, for every edge-supported
+    measure and every query kind (the edge-slot tentpole contract)."""
+    store = _build(ops)
+    eng = store.engine()
+    t_k = t_raw % (store.t_cur + 1)
+    t_l = min(store.t_cur, t_k + (t_raw % 5))
+    qs = [Query("point", "node", "degree", t_k=t_k, v=v),
+          Query("diff", "node", "degree", t_k=t_k, t_l=t_l, v=v),
+          Query("agg", "node", "degree", t_k=t_k, t_l=t_l, v=v,
+                agg="mean"),
+          Query("point", "global", "num_edges", t_k=t_k),
+          Query("point", "global", "num_nodes", t_k=t_k),
+          Query("point", "global", "density", t_k=t_k),
+          Query("point", "global", "avg_degree", t_k=t_k),
+          Query("diff", "global", "num_edges", t_k=t_k, t_l=t_l)]
+    dense = [np.asarray(r).item()
+             for r in eng.evaluate_many(qs, layout="dense")]
+    edge = [np.asarray(r).item()
+            for r in eng.evaluate_many(qs, layout="edge")]
+    assert edge == dense
