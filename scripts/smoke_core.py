@@ -74,3 +74,8 @@ print("core smoke OK")
 # mixed-plan queries vs sequential replay)
 import smoke_engine  # noqa: E402  (same scripts/ directory)
 smoke_engine.main()
+
+# live-serving gate (ingest-while-querying: watermark, epoch swap,
+# frontend cache — parity vs a from-scratch store at every watermark)
+import smoke_serving  # noqa: E402  (same scripts/ directory)
+smoke_serving.main()

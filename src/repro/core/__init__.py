@@ -6,7 +6,8 @@ from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
                               Delta, concat_deltas, delta_from_numpy,
                               empty_delta, minimal_delta_between, slice_delta)
 from repro.core.engine import (AnchorCandidate, AnchorSelector,
-                               HistoricalQueryEngine, PlanChoice, Planner)
+                               HistoricalQueryEngine, PlanChoice, Planner,
+                               WatermarkError)
 from repro.core.graph import (DenseGraph, EdgeGraph, dense_from_numpy,
                               dense_to_edge, edge_to_dense, empty_dense,
                               empty_edge)

@@ -60,6 +60,14 @@ def _pow2(n: int, lo: int = 1) -> int:
     return max(lo, 1 << int(np.ceil(np.log2(max(int(n), 1)))))
 
 
+class WatermarkError(RuntimeError):
+    """A query's time lies beyond the engine's serving watermark
+    ``t_served``: ops at that time may still sit in a pending ingest
+    buffer, so the frozen state cannot answer it exactly.  Raised by
+    watermarked engines (``repro.serving``); callers choose between
+    surfacing it and blocking on an epoch swap."""
+
+
 def _window_ops_host(t_sorted: np.ndarray, t_lo, t_hi) -> int:
     """#ops with t in (t_lo, t_hi] — ``count_window_ops`` on a host
     copy of the (time-sorted) delta timestamps.  Keeps the planning
@@ -709,6 +717,21 @@ class HistoricalQueryEngine:
         # retroactively mutate a previous call's saved stats.
         self.last_group_stats: GroupStats = GroupStats()
         self._stats_active = False
+        # Serving-mode plumbing (repro.serving).  ``t_served`` is the
+        # live watermark: when set, evaluate_many refuses queries past
+        # it (WatermarkError) instead of silently serving a state that
+        # may be missing pending ops.  ``workload`` is an optional
+        # recorder (``serving.policy.WorkloadStats``): every served
+        # query's times land in its histogram, which drives
+        # workload-driven materialization at the next epoch swap.
+        self.t_served: int | None = None
+        self.workload = None
+        # Minimum padded group size (1 = tightest pow2).  A serving
+        # layer sets this to its micro-batch size so every group runs
+        # the same program shape regardless of how a batch fragments
+        # across (plan, anchor, measure) groups — bounding compiles to
+        # one per group key instead of one per (key, pow2(b)).
+        self.group_pad_min = 1
         # Edge-layout anchors are derived lazily from the dense ones
         # through the slot registry (dense_to_edge) and cached.
         self._edge_anchors: dict = {}
@@ -950,12 +973,13 @@ class HistoricalQueryEngine:
         """
         b = len(qs)
         mode = self._shard_mode(key, b, mesh, shard)
+        b_floor = max(b, self.group_pad_min)
         if mode is not None:
             from repro.sharding.graph import batch_pad, mesh_size
-            padded = (batch_pad(b, mesh_size(mesh)) if mode == "batch"
-                      else _pow2(b))
+            padded = (batch_pad(b_floor, mesh_size(mesh))
+                      if mode == "batch" else _pow2(b_floor))
         else:
-            padded = _pow2(b)
+            padded = _pow2(b_floor)
         self.last_group_stats.append((key, b, mode))
         pad = padded - b
         tks = np.asarray([q.t_k for q in qs] + [qs[-1].t_k] * pad,
@@ -1165,7 +1189,9 @@ class HistoricalQueryEngine:
             m = batch_measure(g, jnp.asarray(vs[sel]),
                               measure=key.measure, scope=key.scope)
             if out is None:
-                out = jnp.zeros((b,), m.dtype)
+                # trailing dims carry vector measures
+                # (degree_distribution) through unchanged
+                out = jnp.zeros((b,) + m.shape[1:], m.dtype)
             out = out.at[jnp.asarray(sel)].set(m)
         return out
 
@@ -1175,7 +1201,8 @@ class HistoricalQueryEngine:
                       windowed: bool | None = None,
                       layout: str | None = None,
                       return_choices: bool = False,
-                      mesh=None, shard: str = "auto"):
+                      mesh=None, shard: str = "auto",
+                      enforce_watermark: bool = True):
         """Evaluate B historical queries, grouped by (plan, anchor) and
         executed as one device program per group.
 
@@ -1195,8 +1222,25 @@ class HistoricalQueryEngine:
         Sharded and single-device execution return bit-identical
         results; with one visible device the mesh is ignored (host
         fallback).
+
+        A watermarked engine (``t_served`` set by the serving layer)
+        refuses queries past the watermark with ``WatermarkError``;
+        ``enforce_watermark=False`` bypasses the check for a caller
+        that already applied its own staleness policy
+        (``serving.LiveGraphStore`` with ``stale="serve"``).
         """
         mesh = mesh if mesh is not None else self.mesh
+        if self.t_served is not None and enforce_watermark:
+            for q in queries:
+                t_hi = q.t_k if q.t_l is None else max(q.t_k, q.t_l)
+                if t_hi > self.t_served:
+                    raise WatermarkError(
+                        f"query time {t_hi} is past the serving "
+                        f"watermark t_served={self.t_served}; swap the "
+                        "ingest epoch (or pass stale='block' at the "
+                        "serving layer) to advance it")
+        if self.workload is not None:
+            self.workload.record_queries(queries)
         choices = [self._resolve(q, plan, indexed, partial_rows, windowed,
                                  layout)
                    for q in queries]

@@ -49,9 +49,18 @@ def gather_window(delta: Delta, t_lo, t_hi, window_cap: int) -> Delta:
     """
     i0, i1 = temporal_range(delta, t_lo, t_hi)
     n = jnp.minimum(i1 - i0, window_cap)
+    # dynamic_slice clamps an out-of-range start (i0 + window_cap past
+    # the capacity) back to capacity - window_cap, which would silently
+    # shift the slice onto ops BEFORE the window while dropping in-window
+    # ops — exactly the case for suffix windows anchored at the current
+    # snapshot.  Slice from the clamped start and roll the in-window ops
+    # to the front, preserving the compaction contract (valid_mask is
+    # positional).
+    start = jnp.clip(i0, 0, max(delta.capacity - window_cap, 0))
 
     def slice1(x, fill):
-        y = jax.lax.dynamic_slice_in_dim(x, i0, window_cap)
+        y = jax.lax.dynamic_slice_in_dim(x, start, window_cap)
+        y = jnp.roll(y, start - i0)
         keep = jnp.arange(window_cap, dtype=jnp.int32) < n
         return jnp.where(keep, y, fill)
 

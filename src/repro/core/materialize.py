@@ -34,6 +34,23 @@ class MaterializedStore:
         self.times.append(int(t))
         self.snapshots.append(g)
 
+    def remove(self, t: int) -> DenseGraph:
+        """Evict the snapshot materialized at ``t`` (workload-driven
+        policies retire cold anchors under a byte budget).  Anchor ids
+        are positional, so any engine built against the old sequence
+        must be rebuilt — ``TemporalGraphStore.engine()`` notices the
+        times changed and does; the serving layer swaps engines
+        wholesale at epoch boundaries."""
+        i = self.times.index(int(t))
+        self.times.pop(i)
+        return self.snapshots.pop(i)
+
+    def device_bytes(self) -> int:
+        """Approximate device footprint of the materialized sequence
+        (the workload policy's budget denominator)."""
+        from repro.core.engine import _snapshot_bytes
+        return sum(_snapshot_bytes(g) for g in self.snapshots)
+
     def select(self, t_k: int, delta: Delta,
                method: Literal["time", "ops"] = "ops"):
         """Pick the anchor snapshot for reconstructing SG_{t_k}.

@@ -95,11 +95,27 @@ def avg_degree(g: DenseGraph) -> jax.Array:
     return 2.0 * g.num_edges().astype(jnp.float32) / n
 
 
-def degree_distribution(g: DenseGraph, max_deg: int) -> jax.Array:
-    """Histogram of degrees over valid nodes, bins [0, max_deg]."""
-    deg = jnp.clip(g.degrees(), 0, max_deg)
-    w = g.nodes.astype(jnp.int32)
+# Registered degree-distribution bin count: degrees past the last bin
+# clip into it, so the histogram shape is static (one jit program per
+# measure) at any graph size.
+DEGREE_DIST_BINS = 64
+
+
+def _degree_histogram(deg: jax.Array, nodes: jax.Array,
+                      max_deg: int) -> jax.Array:
+    """Validity-weighted degree bincount, bins [0, max_deg] with
+    overflow clipped into the last bin.  Shared by BOTH layouts: the
+    dense/edge parity contract is exactly 'same degrees in, same bits
+    out', so the histogram arithmetic must live in one place."""
+    deg = jnp.clip(deg, 0, max_deg)
+    w = nodes.astype(jnp.int32)
     return jnp.zeros((max_deg + 1,), jnp.int32).at[deg].add(w)
+
+
+def degree_distribution(g: DenseGraph,
+                        max_deg: int = DEGREE_DIST_BINS) -> jax.Array:
+    """Histogram of degrees over valid nodes, bins [0, max_deg]."""
+    return _degree_histogram(g.degrees(), g.nodes, max_deg)
 
 
 @partial(jax.jit, static_argnames=("max_iters",))
@@ -201,6 +217,7 @@ GLOBAL_MEASURES = {
     "num_components": num_components,
     "diameter": diameter,
     "triangles": triangle_count,
+    "degree_distribution": degree_distribution,
 }
 
 
@@ -239,6 +256,16 @@ def edge_avg_degree(g: EdgeGraph) -> jax.Array:
     return 2.0 * g.num_edges().astype(jnp.float32) / n
 
 
+def edge_degree_distribution(g: EdgeGraph,
+                             max_deg: int = DEGREE_DIST_BINS) -> jax.Array:
+    """Degree histogram without the N² adjacency: the shared bincount
+    over the slot-registry degrees (``EdgeGraph.degrees`` is the
+    validity-masked segment-sum over ``eu``/``ev``).  The integer
+    counts equal the dense row-sum degrees exactly, so the histogram
+    bit-matches ``degree_distribution``."""
+    return _degree_histogram(g.degrees(), g.nodes, max_deg)
+
+
 EDGE_NODE_MEASURES = {
     "degree": edge_degree,
 }
@@ -247,6 +274,7 @@ EDGE_GLOBAL_MEASURES = {
     "num_edges": edge_num_edges,
     "density": edge_density,
     "avg_degree": edge_avg_degree,
+    "degree_distribution": edge_degree_distribution,
 }
 
 

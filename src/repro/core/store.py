@@ -89,6 +89,11 @@ class TemporalGraphStore:
                                       adj=jnp.zeros((n_cap, n_cap), bool))
         self.materialized = MaterializedStore()
         self.policy = policy
+        # Minimum device-log capacity (0 = tightest pow2).  Serving
+        # layers pre-size it for expected growth so epoch swaps keep
+        # every kernel's delta shape — and its compiled program —
+        # stable (LiveGraphStore ``delta_cap_hint``).
+        self.delta_cap_min = 0
         self._ops_since_mat = 0
         self._t_last_mat = 0
         self._delta_cache: Delta | None = None
@@ -234,7 +239,8 @@ class TemporalGraphStore:
         if self._delta_cache is not None and capacity is None:
             return self._delta_cache
         n = len(self._op)
-        cap = capacity or max(1, 1 << int(np.ceil(np.log2(max(n, 1)))))
+        cap = capacity or max(1, self.delta_cap_min,
+                              1 << int(np.ceil(np.log2(max(n, 1)))))
         pad = cap - n
         d = Delta(
             op=jnp.asarray(np.concatenate([self._op,
@@ -249,6 +255,13 @@ class TemporalGraphStore:
         if capacity is None:
             self._delta_cache = d
         return d
+
+    def op_times_host(self) -> np.ndarray:
+        """Sorted host copy of the log timestamps (they are sorted by
+        construction — ingest is append-only time-ordered).  Planning
+        code (anchor costing, workload materialization) binary-searches
+        this instead of syncing ``delta().t`` off device."""
+        return self._t
 
     def node_index(self) -> NodeIndex:
         if self._index_cache is None:
@@ -393,6 +406,31 @@ class TemporalGraphStore:
                 eng._replicated(mesh, "current_edge", eng.current_edge)
                 if slots_divisible(eng.current_edge.e_cap, mesh):
                     eng._slot_sharded_anchor(mesh, -1)
+        return eng
+
+    def freeze_serving_state(self, *, mesh=None, indexed: bool = False,
+                             node_cap: int = 1024) -> HistoricalQueryEngine:
+        """Build the complete frozen serving view of the current store
+        state — the epoch-swap hook for ``repro.serving``.
+
+        Everything a query could touch is converted to device arrays
+        *now*, off the serving critical path: the interval delta
+        (pow2-padded device log), the registry-rebased edge snapshot
+        (when slots were registered since the last freeze), the engine
+        with its host-side planning copies, and — given a ``mesh`` —
+        the eager multi-device placements of ``place_on_mesh``.  The
+        returned engine is immutable with respect to later ``ingest``
+        calls (its arrays are snapshots), so a serving layer can keep
+        answering from it while the store absorbs the next epoch's
+        writes and freezes again."""
+        self.delta()                     # device conversion of the log
+        if self.layout == "edge":
+            # rebase the serving snapshot onto the grown registry once,
+            # host-side, instead of per query
+            self.current = self.current_edge_snapshot()
+        eng = self.engine(indexed=indexed, node_cap=node_cap)
+        if mesh is not None:
+            eng = self.place_on_mesh(mesh)   # keeps the index, adds mesh
         return eng
 
     def query(self, q: Query, plan: str = "auto", indexed: bool = False,

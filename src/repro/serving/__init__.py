@@ -1,0 +1,17 @@
+# Live serving: double-buffered ingest (epoch swap + watermark),
+# workload-driven materialization, and the micro-batching frontend.
+# The batch engine (repro.core) stays the execution substrate; this
+# package owns everything that makes it continuously-serving.
+from repro.serving.frontend import (FrontendStats, MicroBatchFrontend,
+                                    query_cache_key)
+from repro.serving.ingest import LiveGraphStore, SwapRecord, WatermarkError
+from repro.serving.policy import (PeriodicMaterializationPolicy,
+                                  RebalanceResult, WorkloadStats,
+                                  WorkloadMaterializationPolicy)
+
+__all__ = [
+    "FrontendStats", "LiveGraphStore", "MicroBatchFrontend",
+    "PeriodicMaterializationPolicy", "RebalanceResult", "SwapRecord",
+    "WatermarkError", "WorkloadMaterializationPolicy", "WorkloadStats",
+    "query_cache_key",
+]

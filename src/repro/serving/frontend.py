@@ -1,0 +1,250 @@
+"""Micro-batching query frontend: coalesce, dedupe, cache, dispatch once.
+
+The batched executor's whole advantage is amortization — one device
+program per (plan, anchor, layout) group — but a live system receives
+queries one at a time.  ``MicroBatchFrontend`` closes that gap:
+
+* ``submit(q)`` returns a future immediately.  Requests queue until
+  either ``max_batch`` of them are waiting or the oldest has aged past
+  ``max_delay_ms``; the scheduler then drains the queue and dispatches
+  ONE ``LiveGraphStore.evaluate_many`` (which reuses the engine's
+  planner groups, pow2 padding, and ``mesh``/``layout`` pass-through
+  unchanged).
+
+* **Exact result cache** keyed ``(measure, args, t, layout)`` — the
+  full query tuple plus the forced layout — and stamped with the live
+  store's ``generation``, which every epoch swap bumps: watermark
+  advance invalidates the whole cache in O(1).  Within an epoch the
+  cache is exact by the serving contract (history at ``t ≤ t_served``
+  is immutable and results are layout/shard bit-stable), so hits skip
+  the device entirely.  Duplicate queries *within* one batch collapse
+  to a single evaluation the same way.
+
+The frontend runs in two modes: synchronous (call ``flush()`` — or
+let a full queue auto-drain — and collect futures; what the tests and
+benchmarks use) and threaded (``start()`` spawns a scheduler thread
+that drains on the deadline; ``stop()`` joins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.plans import Query
+from repro.serving.ingest import LiveGraphStore, WatermarkError
+
+__all__ = ["MicroBatchFrontend", "FrontendStats", "query_cache_key"]
+
+
+def query_cache_key(q: Query, layout: str | None) -> tuple:
+    """The exact-result-cache key: every semantic field of the query
+    plus the requested execution layout.  Layout never changes a
+    result bit (the engine's parity contract), but keying on it keeps
+    cache entries interpretable per serving configuration."""
+    return (q.kind, q.scope, q.measure, q.agg if q.kind == "agg" else "",
+            int(q.t_k), None if q.t_l is None else int(q.t_l),
+            None if q.v is None else int(q.v), layout or "auto")
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    submitted: int = 0
+    served: int = 0
+    batches: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    coalesced_dupes: int = 0
+    max_batch_seen: int = 0
+
+    def batch_occupancy(self) -> float:
+        return self.served / self.batches if self.batches else 0.0
+
+
+class MicroBatchFrontend:
+    """Request queue + coalescing scheduler over a ``LiveGraphStore``."""
+
+    def __init__(self, live: LiveGraphStore, *, max_batch: int = 64,
+                 max_delay_ms: float = 2.0, cache_entries: int = 4096,
+                 stale: str = "raise", layout: str | None = None,
+                 **evaluate_kw):
+        self.live = live
+        self.max_batch = int(max_batch)
+        self.max_delay_ms = float(max_delay_ms)
+        self.cache_entries = int(cache_entries)
+        self.stale = stale
+        self.layout = layout
+        self.evaluate_kw = evaluate_kw
+        self.stats = FrontendStats()
+        self._cache: OrderedDict[tuple, tuple[int, object]] = OrderedDict()
+        self._queue: list[tuple[Query, tuple, Future, float]] = []
+        self._cv = threading.Condition()
+        self._thread: threading.Thread | None = None
+        self._running = False
+
+    # ----------------------------------------------------------- cache
+
+    def _cache_get(self, key: tuple):
+        """Hit iff present AND stamped with the current generation —
+        every epoch swap bumps ``live.generation``, so watermark
+        advance invalidates without walking the table."""
+        entry = self._cache.get(key)
+        if entry is None:
+            return None
+        gen, value = entry
+        if gen != self.live.generation:
+            del self._cache[key]        # stale epoch: drop lazily
+            return None
+        self._cache.move_to_end(key)
+        return value
+
+    def _cache_put(self, key: tuple, gen: int, value) -> None:
+        if gen != self.live.generation:
+            return                      # swapped mid-flight: don't poison
+        self._cache[key] = (gen, value)
+        while len(self._cache) > self.cache_entries:
+            self._cache.popitem(last=False)
+
+    # ---------------------------------------------------------- submit
+
+    def submit(self, q: Query) -> Future:
+        """Enqueue one query; resolve immediately on a cache hit."""
+        fut: Future = Future()
+        key = query_cache_key(q, self.layout)
+        with self._cv:
+            self.stats.submitted += 1
+            hit = self._cache_get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                fut.set_result(hit)
+                return fut
+            self.stats.cache_misses += 1
+            self._queue.append((q, key, fut, time.perf_counter()))
+            self._cv.notify()
+            full = len(self._queue) >= self.max_batch
+        if full and self._thread is None:
+            self._drain_one_batch()
+        return fut
+
+    def serve(self, queries: Sequence[Query]) -> list:
+        """Synchronous convenience: submit everything, flush, gather."""
+        futs = [self.submit(q) for q in queries]
+        self.flush()
+        return [f.result() for f in futs]
+
+    # ------------------------------------------------------- scheduler
+
+    def flush(self) -> int:
+        """Drain every queued request now (≤ max_batch per dispatch)."""
+        n = 0
+        while True:
+            served = self._drain_one_batch()
+            if not served:
+                return n
+            n += served
+
+    def _drain_one_batch(self) -> int:
+        with self._cv:
+            batch, self._queue = (self._queue[:self.max_batch],
+                                  self._queue[self.max_batch:])
+        if not batch:
+            return 0
+        gen = self.live.generation
+        w = self.live.t_served
+        if self.stale == "raise":
+            # fail ONLY the past-watermark requests — one early query
+            # must not poison the coalesced batch of servable ones
+            servable = []
+            for entry in batch:
+                q = entry[0]
+                t_hi = q.t_k if q.t_l is None else max(q.t_k, q.t_l)
+                if t_hi > w:
+                    entry[2].set_exception(WatermarkError(
+                        f"query time {t_hi} is past the watermark "
+                        f"t_served={w}"))
+                else:
+                    servable.append(entry)
+            if not servable:
+                return len(batch)
+        else:
+            servable = batch
+        # collapse duplicate keys: one evaluation, every future filled
+        uniq: dict[tuple, list[Future]] = {}
+        uniq_qs: list[Query] = []
+        for q, key, fut, _ts in servable:
+            if key not in uniq:
+                uniq[key] = []
+                uniq_qs.append(q)
+            else:
+                self.stats.coalesced_dupes += 1
+            uniq[key].append(fut)
+        try:
+            results = self.live.evaluate_many(
+                uniq_qs, stale=self.stale, layout=self.layout,
+                **self.evaluate_kw)
+        except Exception as exc:            # noqa: BLE001 — fan out
+            for futs in uniq.values():
+                for f in futs:
+                    f.set_exception(exc)
+            return len(batch)
+        for q, (key, futs), r in zip(uniq_qs, uniq.items(), results):
+            value = np.asarray(r)
+            value = value.item() if value.ndim == 0 else value
+            t_hi = q.t_k if q.t_l is None else max(q.t_k, q.t_l)
+            if t_hi <= w:
+                # only exact (within-watermark) results are cacheable
+                self._cache_put(key, gen, value)
+            for f in futs:
+                f.set_result(value)
+        self.stats.batches += 1
+        self.stats.served += len(batch)
+        self.stats.max_batch_seen = max(self.stats.max_batch_seen,
+                                        len(batch))
+        return len(batch)
+
+    def _scheduler(self) -> None:
+        while True:
+            with self._cv:
+                while self._running and not self._queue:
+                    self._cv.wait(timeout=0.1)
+                if not self._running and not self._queue:
+                    return
+                oldest = self._queue[0][3]
+                deadline = oldest + self.max_delay_ms / 1e3
+                now = time.perf_counter()
+                ready = (len(self._queue) >= self.max_batch
+                         or now >= deadline)
+                if not ready:
+                    self._cv.wait(timeout=deadline - now)
+                    ready = bool(self._queue) and (
+                        len(self._queue) >= self.max_batch
+                        or time.perf_counter() >= deadline)
+            if ready:
+                self._drain_one_batch()
+
+    def start(self) -> "MicroBatchFrontend":
+        """Spawn the deadline-draining scheduler thread."""
+        if self._thread is None:
+            self._running = True
+            self._thread = threading.Thread(target=self._scheduler,
+                                            name="frontend-scheduler",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the scheduler after draining what is queued."""
+        th = self._thread
+        if th is None:
+            return
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        th.join(timeout=10)
+        self._thread = None
+        self.flush()

@@ -1,0 +1,287 @@
+"""Double-buffered live ingest: a frozen epoch serves, a pending log fills.
+
+The paper's storage model is inherently live — the current snapshot
+plus an append-only delta absorbing new time-annotated operations
+(Algorithm 3) — but the batch engine assumes ingest has stopped before
+queries start.  ``LiveGraphStore`` removes that assumption with two
+buffers and one pointer flip:
+
+* **Pending buffer** (host): ``append`` lands writes in a plain python
+  list.  No device work, no cache invalidation, no effect on in-flight
+  queries — the write path costs an O(1) append plus two integer
+  comparisons.
+
+* **Frozen epoch** (device): queries run against an immutable
+  ``HistoricalQueryEngine`` built by the last epoch swap.  Its delta,
+  snapshots, placements and host planning copies never change after
+  the flip, so the read path is exactly the batch engine's.
+
+* **Epoch swap** (``swap()``): drains the pending buffer, feeds it
+  through ``TemporalGraphStore.ingest``/``advance_to`` (registry
+  rebasing included), lets the materialization policy rebalance the
+  anchor set against the epoch's query histogram, then builds the next
+  frozen engine with ``store.freeze_serving_state`` — delta device
+  conversion, edge-snapshot rebase, and (given a mesh) the eager
+  multi-device placements all happen HERE, off the serving critical
+  path — and finally flips the engine pointer.  ``swap_async`` runs
+  the whole thing on a daemon thread while the old epoch keeps
+  serving.
+
+**Watermark.** ``t_served`` defines exactness: every query with times
+``t ≤ t_served`` is answered bit-identically to a from-scratch store
+built from the full op log (tests/test_serving.py).  It is the frozen
+epoch's ``t_cur``, clamped below the earliest pending-op time — ops
+can only arrive with strictly increasing times past the watermark, so
+served history is immutable.  Queries beyond it either raise
+(``stale="raise"``, the default), block on a synchronous swap
+(``stale="block"``), or are served best-effort from the frozen state
+(``stale="serve"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Iterable, Sequence
+
+from repro.core.engine import HistoricalQueryEngine, WatermarkError
+from repro.core.plans import Query
+from repro.core.store import Op, TemporalGraphStore
+from repro.serving.policy import WorkloadStats
+
+__all__ = ["LiveGraphStore", "SwapRecord", "WatermarkError"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapRecord:
+    """One epoch swap, as observed by the serving layer."""
+
+    epoch: int
+    t_served: int
+    ops_absorbed: int
+    ops_rejected: int
+    seconds: float
+    anchors_added: tuple[int, ...] = ()
+    anchors_evicted: tuple[int, ...] = ()
+
+
+class LiveGraphStore:
+    """A continuously-serving temporal graph store.
+
+    ``policy`` follows the serving rebalance protocol
+    (``serving.policy``): called at each swap with the store and the
+    epoch's ``WorkloadStats``.  ``mesh`` makes every frozen epoch a
+    multi-device engine (``place_on_mesh`` placements are part of the
+    swap, so steady-state queries never pay placement transfers).
+    ``delta_cap_hint`` pre-sizes the device log (rounded up to a power
+    of two) so the frozen delta keeps one shape across epochs — no
+    steady-state recompiles until ingest outgrows the hint.
+    ``group_pad_min`` pads every executor group to at least that many
+    queries (set it to the frontend's micro-batch size): fragmented
+    batches then reuse one compiled program per group key instead of
+    one per occupancy.
+    """
+
+    def __init__(self, n_cap: int = 0, *, e_cap: int | None = None,
+                 layout: str = "dense", policy=None, mesh=None,
+                 indexed: bool = False, node_cap: int = 1024,
+                 delta_cap_hint: int | None = None,
+                 group_pad_min: int = 1,
+                 store: TemporalGraphStore | None = None):
+        if store is None:
+            store = TemporalGraphStore(n_cap, e_cap=e_cap, layout=layout)
+        if policy is not None and store.layout != "dense":
+            raise ValueError("materialization policies need the dense "
+                             "layout (snapshots are stored dense)")
+        self.store = store
+        if delta_cap_hint:
+            # pre-size the device log for expected growth: every epoch
+            # then freezes a delta of the SAME capacity, so swap never
+            # changes a kernel shape (no steady-state recompiles)
+            store.delta_cap_min = max(
+                store.delta_cap_min,
+                1 << (int(delta_cap_hint) - 1).bit_length())
+        self.policy = policy
+        self.mesh = mesh
+        self.indexed = indexed
+        self.node_cap = node_cap
+        self.group_pad_min = int(group_pad_min)
+        self.workload = WorkloadStats()
+        self.epoch = 0
+        # Result-cache invalidation token: bumped by every swap (the
+        # frontend keys its exact cache on it — watermark advance
+        # invalidates, per the serving contract).
+        self.generation = 0
+        self.swap_history: list[SwapRecord] = []
+        self._pending: list[Op] = []
+        self._t_append_last = store.t_cur
+        # The time unit the in-flight (or last) swap closes: appends
+        # validate against it as well as the engine watermark, so an op
+        # at the closing time cannot slip in between the swap's buffer
+        # drain and its engine flip (it would be logged but never
+        # applied to the already-advanced current snapshot).
+        self._t_closing = store.t_cur
+        self._lock = threading.RLock()       # pending buffer + flip
+        self._swap_lock = threading.Lock()   # one swap in flight
+        self._engine = self._freeze()
+
+    # ------------------------------------------------------------ write path
+
+    def append(self, ops: Iterable[Op | tuple]) -> int:
+        """Land a batch of time-annotated ops in the pending buffer.
+
+        Ops must keep the stream time-ordered and strictly past the
+        watermark (served history is immutable).  Legality against the
+        graph state (duplicate edges, dangling endpoints, ...) is the
+        store's job at swap time — the pending buffer is just a log.
+        Returns the number of ops buffered.
+        """
+        n = 0
+        with self._lock:
+            w = max(self._engine.t_served, self._t_closing)
+            for o in ops:
+                if not isinstance(o, Op):
+                    o = Op(*o)
+                if o.t < self._t_append_last:
+                    raise ValueError(
+                        f"ops must be time-ordered: got t={o.t} after "
+                        f"t={self._t_append_last}")
+                if o.t <= w:
+                    raise ValueError(
+                        f"op at t={o.t} is at or before the watermark "
+                        f"t_served={w}; served history is immutable")
+                self._pending.append(o)
+                self._t_append_last = o.t
+                n += 1
+        return n
+
+    @property
+    def pending_ops(self) -> int:
+        return len(self._pending)
+
+    @property
+    def t_served(self) -> int:
+        """The exactness watermark: the frozen epoch's time frontier,
+        clamped below the earliest pending op (an op appended during an
+        in-flight swap may carry a time the new epoch already claims)."""
+        with self._lock:
+            w = self._engine.t_served
+            if self._pending:
+                w = min(w, self._pending[0].t - 1)
+            return int(w)
+
+    def ingest_lag(self) -> dict:
+        """How far serving trails ingest: buffered ops and time units
+        between the newest accepted op and the watermark."""
+        with self._lock:
+            return {
+                "pending_ops": len(self._pending),
+                "t_behind": max(0, self._t_append_last - self.t_served),
+                "epoch": self.epoch,
+            }
+
+    # ------------------------------------------------------------ epoch swap
+
+    def _freeze(self) -> HistoricalQueryEngine:
+        eng = self.store.freeze_serving_state(
+            mesh=self.mesh, indexed=self.indexed, node_cap=self.node_cap)
+        eng.t_served = self.store.t_cur
+        # the histogram is only consumed (and decayed) by a policy's
+        # rebalance — without one, recording would grow it unboundedly
+        eng.workload = self.workload if self.policy is not None else None
+        eng.group_pad_min = self.group_pad_min
+        return eng
+
+    def swap(self, t_next: int | None = None) -> SwapRecord:
+        """One epoch swap: drain pending → ingest/advance → policy
+        rebalance → freeze the next engine → flip.  Everything before
+        the flip runs against store state the frozen epoch no longer
+        reads, so queries proceed concurrently (``swap_async``); the
+        flip itself is a pointer assignment under the buffer lock.
+
+        Swapping CLOSES every pending time unit (Algorithm 3's unit
+        boundary): the new watermark is the newest pending op's time,
+        and later appends must use strictly later times.  Producers
+        streaming mid-unit should batch appends at unit boundaries (or
+        accept the force-close)."""
+        with self._swap_lock:
+            t0 = time.perf_counter()
+            with self._lock:
+                pending, self._pending = self._pending, []
+                t_hi = max((o.t for o in pending),
+                           default=self.store.t_cur)
+                target = max(int(t_next) if t_next is not None else 0,
+                             t_hi, self.store.t_cur)
+                # publish the closing time BEFORE ingesting: from here
+                # on, concurrent appends must be strictly past it
+                self._t_closing = max(self._t_closing, target)
+            n_acc = self.store.ingest(pending)
+            self.store.advance_to(target)
+            added: tuple[int, ...] = ()
+            evicted: tuple[int, ...] = ()
+            if self.policy is not None:
+                res = self.policy.rebalance(self.store, self.workload)
+                added = tuple(res.added)
+                evicted = tuple(res.evicted)
+            eng = self._freeze()
+            with self._lock:
+                self._engine = eng
+                self.epoch += 1
+                self.generation += 1
+            rec = SwapRecord(
+                epoch=self.epoch, t_served=int(eng.t_served),
+                ops_absorbed=n_acc, ops_rejected=len(pending) - n_acc,
+                seconds=time.perf_counter() - t0,
+                anchors_added=added, anchors_evicted=evicted)
+            self.swap_history.append(rec)
+            return rec
+
+    def swap_async(self) -> threading.Thread:
+        """Run one epoch swap on a daemon thread; the frozen epoch
+        keeps serving until the flip."""
+        th = threading.Thread(target=self.swap, name="epoch-swap",
+                              daemon=True)
+        th.start()
+        return th
+
+    # ------------------------------------------------------------- read path
+
+    @property
+    def engine(self) -> HistoricalQueryEngine:
+        """The frozen serving engine of the current epoch."""
+        return self._engine
+
+    def _late(self, queries: Sequence[Query], w: int) -> list[Query]:
+        return [q for q in queries
+                if (q.t_k if q.t_l is None else max(q.t_k, q.t_l)) > w]
+
+    def evaluate_many(self, queries: Sequence[Query], plan: str = "auto",
+                      *, stale: str = "raise", **kw):
+        """Batched serving with watermark semantics.
+
+        ``stale`` picks what happens to queries past ``t_served``:
+        ``"raise"`` surfaces ``WatermarkError`` (exactness guaranteed),
+        ``"block"`` runs a synchronous epoch swap first (exact, pays
+        the swap latency), ``"serve"`` answers from the frozen state
+        (may miss pending ops — explicitly best-effort).  Everything
+        else is ``HistoricalQueryEngine.evaluate_many``.
+        """
+        if stale not in ("raise", "block", "serve"):
+            raise ValueError(f"unknown stale mode {stale!r}")
+        late = self._late(queries, self.t_served)
+        if late and stale == "block":
+            self.swap()
+            late = self._late(queries, self.t_served)
+        if late and stale != "serve":
+            t_hi = max(q.t_k if q.t_l is None else max(q.t_k, q.t_l)
+                       for q in late)
+            raise WatermarkError(
+                f"{len(late)} queries up to t={t_hi} are past the "
+                f"watermark t_served={self.t_served}; swap the epoch or "
+                "pass stale='block'/'serve'")
+        eng = self._engine
+        return eng.evaluate_many(queries, plan,
+                                 enforce_watermark=not late, **kw)
+
+    def query(self, q: Query, plan: str = "auto", **kw):
+        return self.evaluate_many([q], plan, **kw)[0]

@@ -122,3 +122,30 @@ def test_sequential_matches_vectorized(small_history):
         b = reconstruct_sequential(store.current, d, store.t_cur, t)
         assert bool(jnp.all(a.adj == b.adj)), t
         assert bool(jnp.all(a.nodes == b.nodes)), t
+
+
+def test_gather_window_suffix_clamp_regression(small_history):
+    """gather_window used to let dynamic_slice clamp an out-of-range
+    start (i0 + window_cap > capacity) back toward 0, silently swapping
+    in-window ops for pre-window ones — exactly the suffix windows that
+    two-phase groups anchored at the current snapshot slice.  The
+    gathered window must reconstruct identically to the full log for
+    every anchor-side window and capacity."""
+    from repro.core import reconstruct_dense
+    from repro.core.index import count_window_ops, gather_window
+    store, _ = small_history
+    d = store.delta()
+    tc = store.t_cur
+    for t in range(0, tc + 1, max(tc // 7, 1)):
+        n_win = int(count_window_ops(d, t, tc))
+        for cap in {max(64, n_win), d.capacity // 2, d.capacity}:
+            if cap < n_win or cap > d.capacity:
+                continue
+            w = gather_window(d, t, tc, cap)
+            tw = np.asarray(w.t)[: int(w.n_ops)]
+            assert int(w.n_ops) == n_win
+            assert ((tw > t) & (tw <= tc)).all(), (t, cap)
+            a = reconstruct_dense(store.current, w, tc, t)
+            b = reconstruct_dense(store.current, d, tc, t)
+            assert bool(jnp.all(a.adj == b.adj)), (t, cap)
+            assert bool(jnp.all(a.nodes == b.nodes)), (t, cap)

@@ -572,3 +572,114 @@ def test_cache_path_not_taken_for_large_distinct_time_groups(
     # and the values still match per-query evaluation
     single = [_item(store.query(q, plan="two_phase")) for q in qs]
     assert ref == single
+
+
+# ---------------------------------------------------------------------------
+# degree_distribution: edge-layout parity (satellite, PR 4)
+# ---------------------------------------------------------------------------
+
+
+def test_degree_distribution_edge_dense_parity(small_history):
+    """The edge-layout histogram (bincount over slot-endpoint degrees
+    masked by validity) bit-matches the dense one at every probed time,
+    including through the repeated-time cached point path (vector
+    measures flow through the LRU too)."""
+    from repro.core.queries import (DEGREE_DIST_BINS, EDGE_GLOBAL_MEASURES,
+                                    edge_supported)
+    store, bf = small_history
+    assert "degree_distribution" in EDGE_GLOBAL_MEASURES
+    assert edge_supported("degree_distribution", "global")
+    eng = _engine(store)
+    tc = store.t_cur
+    qs = [Query("point", "global", "degree_distribution", t_k=t)
+          for t in (1, tc // 4, tc // 2, tc)]
+    dense = eng.evaluate_many(qs, layout="dense")
+    edge = eng.evaluate_many(qs, layout="edge")
+    for d, e, q in zip(dense, edge, qs):
+        assert d.shape == (DEGREE_DIST_BINS + 1,)
+        assert np.array_equal(np.asarray(d), np.asarray(e)), q
+        # brute-force oracle: histogram of the replayed snapshot
+        mask, adj = bf.node_mask(q.t_k), bf.adj(q.t_k)
+        deg = np.clip(adj[mask].sum(axis=1), 0, DEGREE_DIST_BINS)
+        ref = np.bincount(deg.astype(np.int64),
+                          minlength=DEGREE_DIST_BINS + 1)
+        assert np.array_equal(np.asarray(d), ref), q
+    # repeated times route through the reconstruction cache and must
+    # carry the vector shape through (regression: cached path assumed
+    # scalars)
+    hot = [qs[1]] * 6
+    eng._snap_cache.clear()
+    a = eng.evaluate_many(hot, plan="two_phase", layout="edge")
+    b = eng.evaluate_many(hot, plan="two_phase", layout="edge")
+    assert eng.last_group_stats.cache_hits >= 1
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+        assert np.array_equal(np.asarray(x), np.asarray(dense[1]))
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction-cache byte budget (satellite, PR 4)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_bytes_sizing(small_history):
+    """_snapshot_bytes prices dense entries at N² + N and edge entries
+    at (4+4+1)·E + N — the ~64x gap is what lets the byte budget keep
+    many more edge-layout entries."""
+    from repro.core.engine import _snapshot_bytes
+    store, _ = small_history
+    eng = _engine(store)
+    g_dense = eng.reconstruct_cached(-1, store.t_cur // 2, layout="dense")
+    g_edge = eng.reconstruct_cached(-1, store.t_cur // 2, layout="edge")
+    n = store.n_cap
+    assert _snapshot_bytes(g_dense) == n * n + n
+    assert _snapshot_bytes(g_edge) == 9 * g_edge.e_cap + n
+    assert _snapshot_bytes(g_edge) < _snapshot_bytes(g_dense)
+
+
+def test_reconstruction_cache_byte_budget_eviction(small_history):
+    """Eviction triggers on snap_cache_bytes even when the entry count
+    is far below snap_cache_cap, and the byte counter stays exact
+    through evictions."""
+    from repro.core.engine import _snapshot_bytes
+    store, _ = small_history
+    eng = HistoricalQueryEngine.from_store(store)
+    per = _snapshot_bytes(store.current)
+    eng.snap_cache_bytes = int(2.5 * per)     # fits 2 dense entries
+    assert eng.snap_cache_cap >= 8            # count cap must NOT bind
+    for t in (1, 2, 3, 4):
+        eng.reconstruct_cached(-1, t, layout="dense")
+    assert len(eng._snap_cache) == 2
+    assert eng._snap_cache_total == 2 * per
+    # LRU order: oldest dense entries evicted, newest kept
+    assert (-1, 1, "dense") not in eng._snap_cache
+    assert (-1, 2, "dense") not in eng._snap_cache
+    assert (-1, 4, "dense") in eng._snap_cache
+    # a hit refreshes recency and leaves the byte counter untouched
+    m0 = eng.cache_misses
+    eng.reconstruct_cached(-1, 3, layout="dense")
+    assert eng.cache_misses == m0 and eng._snap_cache_total == 2 * per
+    eng.reconstruct_cached(-1, 5, layout="dense")
+    assert (-1, 3, "dense") in eng._snap_cache      # refreshed survivor
+    assert (-1, 4, "dense") not in eng._snap_cache  # LRU victim
+    assert eng._snap_cache_total == 2 * per
+
+
+def test_reconstruction_cache_edge_entries_fit_byte_budget(small_history):
+    """Edge-layout entries are E-sized: a budget that holds only two
+    dense snapshots holds many edge ones (the sizing asymmetry the
+    byte budget exists for)."""
+    from repro.core.engine import _snapshot_bytes
+    store, _ = small_history
+    eng = HistoricalQueryEngine.from_store(store)
+    budget = int(2.5 * _snapshot_bytes(store.current))
+    eng.snap_cache_bytes = budget
+    for t in range(1, 9):
+        eng.reconstruct_cached(-1, t, layout="edge")
+    per_edge = _snapshot_bytes(eng.current_edge)
+    expect = min(8, budget // per_edge)
+    assert expect > 2          # strictly more than the 2 dense entries
+    assert len(eng._snap_cache) == expect
+    assert eng._snap_cache_total == sum(
+        _snapshot_bytes(g) for g in eng._snap_cache.values())
+    assert eng._snap_cache_total <= budget
