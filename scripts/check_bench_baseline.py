@@ -31,6 +31,12 @@ BENCHES = {
     "serving": ("benchmarks/bench_serving.py",
                 "benchmarks/BENCH_serving.json",
                 ("smoke", "qps")),
+    # epoch-swap throughput of the segmented delta log at the largest
+    # smoke history — the O(epoch-ops) swap contract (a regression to
+    # O(history) conversion tanks this number first)
+    "segments": ("benchmarks/bench_segments.py",
+                 "benchmarks/BENCH_segments.json",
+                 ("smoke", "swaps_per_sec")),
 }
 
 

@@ -33,6 +33,8 @@ def main() -> None:
     t = 0
     for chunk in range(6):
         ops = []
+        # closed units are immutable: the store rejects ops ≤ t_cur
+        t = max(t, store.t_cur + 1)
         for _ in range(30):
             t += int(rng.integers(0, 2))
             kind = [ADD_NODE, ADD_EDGE, ADD_EDGE, ADD_EDGE, REM_EDGE][

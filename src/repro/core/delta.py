@@ -46,6 +46,14 @@ OP_NAMES = {ADD_NODE: "addNode", REM_NODE: "remNode",
             ADD_EDGE: "addEdge", REM_EDGE: "remEdge", NOP: "nop"}
 
 
+def pow2_capacity(n: int, lo: int = 1) -> int:
+    """Smallest power of two ≥ n, floored at ``lo`` — the one device-
+    capacity rounding rule (shared by the engine's group padding and
+    the segmented log's window materialization, so recompile classes
+    never diverge between them)."""
+    return max(lo, 1 << int(np.ceil(np.log2(max(int(n), 1)))))
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Delta:

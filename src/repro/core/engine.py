@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.delta import Delta
+from repro.core.delta import Delta, pow2_capacity as _pow2
 from repro.core.graph import DenseGraph, EdgeGraph, dense_to_edge
 from repro.core.index import (NodeIndex, count_window_ops, gather_node_ops,
                               gather_window)
@@ -54,10 +54,12 @@ from repro.core.queries import (EDGE_GLOBAL_MEASURES, EDGE_NODE_MEASURES,
                                 edge_supported)
 from repro.core.reconstruct import (degree_series, reconstruct_dense,
                                     reconstruct_edge)
-
-
-def _pow2(n: int, lo: int = 1) -> int:
-    return max(lo, 1 << int(np.ceil(np.log2(max(int(n), 1)))))
+# window_ops_count: #ops with t in (t_lo, t_hi] on a host timestamp
+# copy or a SegmentedDeltaView — keeps the planning loop free of
+# device round-trips (costing B queries is binary searches, not 2B
+# syncs); one definition shared with serving.policy.
+from repro.core.segments import (SegmentedDeltaView,
+                                 window_ops_count as _window_ops_host)
 
 
 class WatermarkError(RuntimeError):
@@ -68,14 +70,6 @@ class WatermarkError(RuntimeError):
     surfacing it and blocking on an epoch swap."""
 
 
-def _window_ops_host(t_sorted: np.ndarray, t_lo, t_hi) -> int:
-    """#ops with t in (t_lo, t_hi] — ``count_window_ops`` on a host
-    copy of the (time-sorted) delta timestamps.  Keeps the planning
-    loop free of device round-trips: costing B queries is B numpy
-    binary searches, not 2B device syncs."""
-    i0 = np.searchsorted(t_sorted, t_lo, side="right")
-    i1 = np.searchsorted(t_sorted, t_hi, side="right")
-    return int(i1 - i0)
 
 
 # ---------------------------------------------------------------------------
@@ -109,13 +103,15 @@ class AnchorSelector:
     def __init__(self, times: Sequence[int], snapshots: Sequence[DenseGraph],
                  *, t_cur: int | None = None,
                  current: DenseGraph | None = None,
-                 t_host: np.ndarray | None = None):
+                 t_host=None):
         assert len(times) == len(snapshots)
         self.times = [int(t) for t in times]
         self.snapshots = list(snapshots)
         self.t_cur = t_cur
         self.current = current
-        self.t_host = t_host  # host copy of delta.t for sync-free costing
+        # host copy of delta.t — or a SegmentedDeltaView — for
+        # sync-free window costing (see _window_ops_host)
+        self.t_host = t_host
 
     def candidates(self, t_query: int, delta: Delta,
                    method: Literal["time", "ops"] = "ops"
@@ -202,7 +198,7 @@ class Planner:
                  selection: Literal["time", "ops"] = "ops",
                  dispatch_overhead: int = DISPATCH_OVERHEAD_OPS,
                  e_cap: int = 0, dense_available: bool = True,
-                 edge_available: bool = False):
+                 edge_available: bool = False, seg_view=None):
         self.selector = selector
         self.n_cap = int(n_cap)
         self.index = index
@@ -214,6 +210,10 @@ class Planner:
         self.e_cap = int(e_cap)
         self.dense_available = bool(dense_available)
         self.edge_available = bool(edge_available)
+        # Segmented log (core.segments): per-segment node-count
+        # statistics stand in for the node-centric index's row extents
+        # when no index was built.
+        self.seg_view = seg_view
         self._row_ptr_host: np.ndarray | None = None
 
     def _window_ops(self, delta: Delta, t_lo, t_hi) -> int:
@@ -222,13 +222,19 @@ class Planner:
         return int(count_window_ops(delta, t_lo, t_hi))
 
     def _node_ops(self, v: int) -> int | None:
-        """#ops touching node v, if the node-centric index is present."""
-        if self.index is None or v is None:
+        """#ops touching node v: node-centric index row extent when an
+        index was built, else the segmented log's per-segment node
+        counts (same counting rule), else unknown."""
+        if v is None:
             return None
-        if self._row_ptr_host is None:
-            self._row_ptr_host = np.asarray(self.index.row_ptr)
-        ptr = self._row_ptr_host
-        return int(ptr[v + 1] - ptr[v])
+        if self.index is not None:
+            if self._row_ptr_host is None:
+                self._row_ptr_host = np.asarray(self.index.row_ptr)
+            ptr = self._row_ptr_host
+            return int(ptr[v + 1] - ptr[v])
+        if self.seg_view is not None:
+            return self.seg_view.node_ops(v)
+        return None
 
     def layout_for(self, q: Query, plan: str) -> str:
         """{dense, edge} execution layout for one query.
@@ -666,7 +672,7 @@ class HistoricalQueryEngine:
     cache invalidate) after ingesting new ops.
     """
 
-    def __init__(self, current: DenseGraph | None, delta: Delta,
+    def __init__(self, current: DenseGraph | None, delta,
                  t_cur: int, *,
                  mat_times: Sequence[int] = (),
                  mat_snapshots: Sequence[DenseGraph] = (),
@@ -674,13 +680,20 @@ class HistoricalQueryEngine:
                  selection: Literal["time", "ops"] = "ops",
                  passes: int = 2, series_budget: int = 1 << 24,
                  mesh=None, current_edge: EdgeGraph | None = None,
-                 snap_cache_cap: int = 16):
+                 snap_cache_cap: int = 16, t_host=None):
         if current is None and current_edge is None:
             raise ValueError("need a current snapshot in at least one "
                              "layout")
         self.current = current
         self.current_edge = current_edge
+        # ``delta`` is the full device log (monolithic stores) OR a
+        # ``SegmentedDeltaView`` (segmented stores): planning reads
+        # only .capacity / window counts from it, and every executor
+        # path materializes its per-group window through _plan_delta /
+        # _group_delta, so the full log never hits the device when the
+        # view is segmented.
         self.delta = delta
+        self.view = delta if isinstance(delta, SegmentedDeltaView) else None
         self.t_cur = int(t_cur)
         self.index = index
         self.node_cap = int(node_cap)
@@ -735,9 +748,17 @@ class HistoricalQueryEngine:
         # Edge-layout anchors are derived lazily from the dense ones
         # through the slot registry (dense_to_edge) and cached.
         self._edge_anchors: dict = {}
-        # One host copy of the sorted timestamps: all per-query costing
-        # (anchor selection + plan choice) runs sync-free on it.
-        self.t_host = np.asarray(delta.t)
+        # One host copy of the sorted timestamps — or the segment
+        # view's per-segment statistics: all per-query costing (anchor
+        # selection + plan choice) runs sync-free on it.  Callers that
+        # already hold a host copy (the store caches one) pass it in,
+        # skipping the O(M) device sync.
+        if self.view is not None:
+            self.t_host = self.view
+        elif t_host is not None:
+            self.t_host = t_host
+        else:
+            self.t_host = np.asarray(delta.t)
         n_cap = (current.n_cap if current is not None
                  else current_edge.n_cap)
         # edge-only engines register the edge current as the -1 anchor
@@ -752,7 +773,8 @@ class HistoricalQueryEngine:
             selection=selection,
             e_cap=current_edge.e_cap if current_edge is not None else 0,
             dense_available=current is not None,
-            edge_available=current_edge is not None)
+            edge_available=current_edge is not None,
+            seg_view=self.view)
 
     @classmethod
     def from_store(cls, store, *, indexed: bool = False,
@@ -763,12 +785,20 @@ class HistoricalQueryEngine:
         if not isinstance(current, DenseGraph):
             current = None  # edge-layout store: no N² state anywhere
         get_edge = getattr(store, "current_edge_snapshot", None)
-        return cls(current, store.delta(), store.t_cur,
+        if getattr(store, "segmented", False):
+            # the engine runs over the segment view: no full-log device
+            # conversion, no O(M) host timestamp sync — epoch swaps
+            # stay O(ops since the last swap)
+            dref, t_host = store.delta_view(), None
+        else:
+            dref, t_host = store.delta(), store.op_times_host()
+        return cls(current, dref, store.t_cur,
                    mat_times=store.materialized.times,
                    mat_snapshots=store.materialized.snapshots,
                    index=store.node_index() if indexed else None,
                    node_cap=node_cap, selection=selection, mesh=mesh,
-                   current_edge=get_edge() if get_edge else None)
+                   current_edge=get_edge() if get_edge else None,
+                   t_host=t_host)
 
     # --------------------------------------------------- device placement
 
@@ -842,10 +872,14 @@ class HistoricalQueryEngine:
             self.last_group_stats.cache_misses += 1
         if layout == "edge":
             t_a, g_a = self.edge_anchor(anchor_id)
-            g = reconstruct_edge(g_a, self.delta, t_a, t)
         else:
             t_a, g_a = self.selector.get(anchor_id)
-            g = reconstruct_dense(g_a, self.delta, t_a, t)
+        d = (self.view.window_delta(min(t_a, t), max(t_a, t))
+             if self.view is not None else self.delta)
+        if layout == "edge":
+            g = reconstruct_edge(g_a, d, t_a, t)
+        else:
+            g = reconstruct_dense(g_a, d, t_a, t)
         if self.snap_cache_cap > 0:
             self._snap_cache[key] = g
             self._snap_cache_total += _snapshot_bytes(g)
@@ -932,19 +966,56 @@ class HistoricalQueryEngine:
 
     def _group_delta(self, key: _GroupKey, t_anchor: int,
                      ts: np.ndarray) -> Delta:
-        """For a windowed two-phase group: slice the delta once to the
-        union window covering every query in the group (temporal
-        index, pow2 capacity).  Reconstruction only reads in-window
-        ops, so results are identical to the full log."""
-        if not key.windowed:
-            return self.delta
+        """The delta operand of one two-phase group: the union window
+        covering every query in the group (pow2 capacity).  A
+        segmented engine always materializes just the overlapping
+        segments; a monolithic one slices via the temporal index when
+        the planner marked the group windowed.  Reconstruction only
+        reads in-window ops, so results are identical to the full
+        log."""
         t_lo = int(min(ts.min(), t_anchor))
         t_hi = int(max(ts.max(), t_anchor))
+        if self.view is not None:
+            return self.view.window_delta(t_lo, t_hi)
+        if not key.windowed:
+            return self.delta
         n_win = _window_ops_host(self.t_host, t_lo, t_hi)
         cap = _pow2(n_win, 64)
         if cap >= self.delta.capacity:
             return self.delta
         return gather_window(self.delta, t_lo, t_hi, cap)
+
+    def _plan_delta(self, key: _GroupKey, tks: np.ndarray,
+                    tls: np.ndarray, b: int) -> Delta:
+        """The delta operand of one delta-only / hybrid group.  The
+        monolithic path hands every group the full log (their kernels
+        window-mask internally); the segmented path materializes the
+        union window — (min t_k, max t_l] for delta-only, the
+        (min t_k, log end] suffix for hybrid (its corrective pass runs
+        against SG_tcur, and matching the monolithic operand exactly —
+        including any future-dated ops — keeps bit-parity
+        unconditional).  Indexed groups gather by log position, so
+        they use the full (position-stable) materialization."""
+        if self.view is None:
+            return self.delta
+        if key.indexed:
+            return self.view.full_delta()
+        if key.plan == "delta_only":
+            return self.view.window_delta(int(tks[:b].min()),
+                                          int(tls[:b].max()))
+        return self.view.window_delta(int(tks[:b].min()), None)
+
+    def _maybe_replicated_delta(self, mesh, d: Delta) -> Delta:
+        """Replicate a group's delta operand on the mesh: only the
+        monolithic full log is worth caching under a stable role.
+        Window materializations — segmented OR monolithic
+        gather_window slices — pass through and shard_map places them
+        on the fly, exactly like the pre-segmented windowed path (an
+        identity-keyed cache would both leak replicated copies and
+        risk serving a stale window after id reuse)."""
+        if self.view is None and d is self.delta:
+            return self._replicated(mesh, "delta", d)
+        return d
 
     def _shard_mode(self, key: _GroupKey, b: int, mesh,
                     shard: str) -> str | None:
@@ -1012,17 +1083,23 @@ class HistoricalQueryEngine:
 
         # Replicated operand placement for batch-axis sharded groups
         # (cached on the engine; plain single-device arrays otherwise).
+        # The delta operand of a delta-only / hybrid group is its union
+        # window (segmented engines materialize only the overlapping
+        # segments); two-phase groups window separately below.
         base_cur = (self.current_edge if key.layout == "edge"
                     else self.current)
+        dlt = (self._plan_delta(key, tks, tls, b)
+               if key.plan in ("delta_only", "hybrid") else None)
         if mode == "batch":
             cur_role = ("current_edge" if key.layout == "edge"
                         else "current")
             cur = self._replicated(mesh, cur_role, base_cur)
-            dlt = self._replicated(mesh, "delta", self.delta)
+            if dlt is not None:
+                dlt = self._maybe_replicated_delta(mesh, dlt)
             idx = (self._replicated(mesh, "index", self.index)
                    if self.index is not None else None)
         else:
-            cur, dlt, idx = base_cur, self.delta, self.index
+            cur, idx = base_cur, self.index
 
         # Build one dispatch descriptor: (kernel, static kwargs,
         # positional args, query-axis mask).  The same descriptor runs
@@ -1097,8 +1174,7 @@ class HistoricalQueryEngine:
             if mode == "rows":
                 from repro.core import distributed as D
                 anchor_rows = self._row_sharded_anchor(mesh, key.anchor_id)
-                if d is self.delta:
-                    d = self._replicated(mesh, "delta", self.delta)
+                d = self._maybe_replicated_delta(mesh, d)
                 return D.two_phase_rows(
                     mesh, anchor_rows, d, t_anchor, tks_d, tls_d, vs_d,
                     kind=key.kind, measure=key.measure, agg=key.agg,
@@ -1107,8 +1183,7 @@ class HistoricalQueryEngine:
                 from repro.core import distributed as D
                 anchor_slots = self._slot_sharded_anchor(mesh,
                                                          key.anchor_id)
-                if d is self.delta:
-                    d = self._replicated(mesh, "delta", self.delta)
+                d = self._maybe_replicated_delta(mesh, d)
                 return D.two_phase_slots(
                     mesh, anchor_slots, d, t_anchor, tks_d, tls_d, vs_d,
                     kind=key.kind, measure=key.measure, agg=key.agg,
@@ -1123,8 +1198,7 @@ class HistoricalQueryEngine:
                     role = ("current" if key.anchor_id == -1
                             else ("anchor", key.anchor_id))
                 g_anchor = self._replicated(mesh, role, g_anchor)
-                if d is self.delta:
-                    d = self._replicated(mesh, "delta", self.delta)
+                d = self._maybe_replicated_delta(mesh, d)
             if key.layout == "edge":
                 if key.kind == "point":
                     desc = (batch_edge_two_phase_point,

@@ -1,0 +1,381 @@
+"""Segmented interval delta log: O(epoch-ops) epoch swaps.
+
+The paper keeps ONE monolithic interval delta Δ[t0, tcur]; our device
+log used to mirror that, so every serving epoch swap rebuilt the whole
+device log from the full host history — O(total history) host→device
+conversion per swap, a scalability cliff under continuous ingest.  This
+module partitions the log at materialized-anchor and epoch-swap
+boundaries instead, which is exactly the paper's "materialize
+intermediate snapshots + partial reconstruction" combination applied to
+*storage*: DeltaGraph partitions its event lists hierarchically the
+same way (Khurana & Deshpande), and AeonG splits current vs historical
+storage along the identical hot/cold line.
+
+* ``Segment`` — an immutable, sealed chunk of the host log covering a
+  half-open time window (ops strictly time-disjoint from every other
+  segment).  Holds compact host (numpy) arrays, per-segment op-count /
+  node-count statistics (the planner's per-segment costing), and a
+  lazily built pow2-capacity device ``Delta`` that can be *spilled*
+  back to host-only under a residency budget and reloaded on demand.
+
+* ``SegmentedDeltaView`` — an ordered sequence of segments behaving
+  like one logical Δ[t0, tcur] for planning (``window_ops``,
+  ``capacity``, ``node_ops`` — all host-side, O(log S) per window) and
+  for execution (``window_delta`` materializes ONE compact device Delta
+  from exactly the segments overlapping an (anchor, t) window,
+  concatenating already-resident per-segment device arrays; results
+  are bit-identical to the monolithic log because in-window ops keep
+  their relative order and every kernel masks by time window anyway).
+
+An epoch swap then seals + converts ONLY the open tail segment — swap
+cost drops from O(total history) to O(ops since the last swap) — while
+successive frozen epochs share the sealed segments' device arrays by
+reference.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta import (ADD_EDGE, NOP, REM_EDGE, T_PAD, Delta,
+                              empty_delta, pow2_capacity as _pow2)
+
+_UID = itertools.count(1)
+_CLOCK = itertools.count(1)
+
+
+def window_ops_count(times, t_lo, t_hi) -> int:
+    """#ops with t in (t_lo, t_hi] — THE host-side window counting
+    rule, over either a sorted host timestamp array (binary searches)
+    or anything exposing ``.window_ops`` (a ``SegmentedDeltaView``).
+    Shared by the engine's planner and the serving materialization
+    policy so both cost windows identically."""
+    window_ops = getattr(times, "window_ops", None)
+    if window_ops is not None:
+        return int(window_ops(t_lo, t_hi))
+    i0 = np.searchsorted(times, t_lo, side="right")
+    i1 = np.searchsorted(times, t_hi, side="right")
+    return int(i1 - i0)
+
+
+class Segment:
+    """One immutable chunk of the host delta log.
+
+    ``op/u/v/slot/t`` are compact host arrays (no padding); ``t`` is
+    non-decreasing and strictly disjoint from every other segment's
+    time range (the store seals by time cut, so ops with the boundary
+    timestamp always land on one side).  The device ``Delta`` is built
+    lazily at pow2 capacity, can be spilled (host arrays stay), and is
+    rebuilt on the next access — the residency policy's unit.
+    """
+
+    __slots__ = ("uid", "sealed", "op", "u", "v", "slot", "t", "n_ops",
+                 "t_min", "t_max", "_delta", "_node_counts", "_touch")
+
+    def __init__(self, op, u, v, slot, t, *, sealed: bool = True):
+        self.uid = next(_UID)
+        self.sealed = sealed
+        self.op = np.ascontiguousarray(op, np.int32)
+        self.u = np.ascontiguousarray(u, np.int32)
+        self.v = np.ascontiguousarray(v, np.int32)
+        self.slot = np.ascontiguousarray(slot, np.int32)
+        self.t = np.ascontiguousarray(t, np.int32)
+        self.n_ops = int(self.op.shape[0])
+        if self.n_ops == 0:
+            raise ValueError("segments hold at least one op")
+        self.t_min = int(self.t[0])
+        self.t_max = int(self.t[-1])
+        self._delta: Delta | None = None
+        self._node_counts: np.ndarray | None = None
+        # creation counts as a touch: a freshly sealed (never yet
+        # queried) segment must not be the residency pass's first
+        # spill victim — it is the newest, hottest data
+        self._touch = next(_CLOCK)
+
+    # ------------------------------------------------------------- stats
+
+    @property
+    def capacity(self) -> int:
+        return _pow2(self.n_ops)
+
+    def window_ops(self, t_lo, t_hi) -> int:
+        """#ops of this segment with t in (t_lo, t_hi] (binary search —
+        the per-segment temporal index)."""
+        i0 = np.searchsorted(self.t, t_lo, side="right")
+        i1 = np.searchsorted(self.t, t_hi, side="right")
+        return int(i1 - i0)
+
+    def ops_at_or_before(self, t) -> int:
+        return int(np.searchsorted(self.t, t, side="right"))
+
+    def node_counts(self, n_cap: int) -> np.ndarray:
+        """Per-node op counts (edge ops under both endpoints, node ops
+        once — the ``NodeIndex`` counting rule), the segment's
+        node-centric index statistic.  Lazy, cached, host-side."""
+        if self._node_counts is None or self._node_counts.shape[0] < n_cap:
+            is_edge = (self.op == ADD_EDGE) | (self.op == REM_EDGE)
+            c = np.bincount(np.clip(self.u, 0, n_cap - 1),
+                            minlength=n_cap)
+            c = c + np.bincount(np.clip(self.v[is_edge], 0, n_cap - 1),
+                                minlength=n_cap)
+            self._node_counts = c.astype(np.int64)
+        return self._node_counts
+
+    # --------------------------------------------------------- residency
+
+    @property
+    def is_resident(self) -> bool:
+        return self._delta is not None
+
+    def device_bytes(self) -> int:
+        """Device footprint of the (resident) pow2 Delta: five i32
+        columns plus the scalar."""
+        return 5 * 4 * self.capacity + 4
+
+    @property
+    def delta(self) -> Delta:
+        """The segment's device Delta (pow2 capacity), built on first
+        access and after a spill — reload-on-demand.  Reads/returns a
+        local so a residency pass spilling concurrently (the swap
+        thread) can never make an in-flight access observe None."""
+        self._touch = next(_CLOCK)
+        d = self._delta
+        if d is None:
+            cap = self.capacity
+            pad = cap - self.n_ops
+
+            def col(x, fill):
+                return jnp.asarray(np.concatenate(
+                    [x, np.full((pad,), fill, np.int32)]) if pad else x)
+
+            d = Delta(op=col(self.op, NOP), u=col(self.u, 0),
+                      v=col(self.v, 0), slot=col(self.slot, 0),
+                      t=col(self.t, T_PAD), n_ops=jnp.int32(self.n_ops))
+            self._delta = d
+        return d
+
+    def spill(self) -> None:
+        """Drop the device arrays (host arrays remain); the next
+        ``delta`` access rebuilds them."""
+        self._delta = None
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"Segment(uid={self.uid}, ops={self.n_ops}, "
+                f"t=({self.t_min}..{self.t_max}), "
+                f"resident={self.is_resident})")
+
+
+class SegmentedDeltaView:
+    """Δ[t0, tcur] as an ordered sequence of time-disjoint segments.
+
+    Planning-side it quacks like the host timestamp copy the engine
+    used to keep (``window_ops``, ``capacity``, ``node_ops``), but at
+    O(log S + log seg) per window via per-segment statistics instead of
+    one O(M) array.  Execution-side, ``window_delta`` materializes one
+    compact device ``Delta`` from exactly the segments overlapping a
+    query window; materializations are cached per view (successive
+    serving epochs share the per-segment device arrays by reference —
+    segments are immutable — while each epoch's view keeps its own
+    window cache, so an in-flight swap never mutates state a frozen
+    epoch is serving from).
+    """
+
+    def __init__(self, segments, *, n_cap: int = 0, cap_min: int = 0,
+                 window_cache_cap: int = 8):
+        self.segments: tuple[Segment, ...] = tuple(segments)
+        self.n_cap = int(n_cap)
+        self.cap_min = int(cap_min)
+        self._cache: "OrderedDict" = OrderedDict()
+        self._cache_cap = int(window_cache_cap)
+        # full-log materializations keyed by capacity, OUTSIDE the
+        # window LRU: indexed groups fetch the full delta per dispatch
+        # and window churn must not evict it into an O(history)
+        # re-concat (the view is immutable, so no invalidation needed)
+        self._full: dict[int, Delta] = {}
+        # concurrent readers (serving threads) and the residency pass
+        # (swap thread) share this view's cache state
+        self._lock = threading.Lock()
+        self._tmin = np.asarray([s.t_min for s in self.segments], np.int64)
+        self._tmax = np.asarray([s.t_max for s in self.segments], np.int64)
+        self._cum = np.concatenate(
+            [[0], np.cumsum([s.n_ops for s in self.segments])]).astype(
+                np.int64)
+        self._node_ops_sum: np.ndarray | None = None
+
+    # ------------------------------------------------------------ planning
+
+    @property
+    def n_ops(self) -> int:
+        return int(self._cum[-1])
+
+    @property
+    def capacity(self) -> int:
+        """The monolithic log's device capacity, virtually: what
+        ``store.delta()`` would pad to.  Planner cost terms (windowed
+        thresholds, shard-mode work estimates) read this."""
+        return max(1, self.cap_min, _pow2(self.n_ops))
+
+    def ops_at_or_before(self, t) -> int:
+        """#ops with timestamp ≤ t: two boundary binary searches (the
+        segments are strictly time-disjoint and time-ordered)."""
+        j = int(np.searchsorted(self._tmax, t, side="right"))
+        n = int(self._cum[j])
+        if j < len(self.segments) and self.segments[j].t_min <= t:
+            n += self.segments[j].ops_at_or_before(t)
+        return n
+
+    def window_ops(self, t_lo, t_hi) -> int:
+        """#ops with t in (t_lo, t_hi] — the temporal-index count the
+        AnchorSelector/Planner charge reconstruction with."""
+        return self.ops_at_or_before(t_hi) - self.ops_at_or_before(t_lo)
+
+    def node_ops(self, v) -> int | None:
+        """#ops touching node v — the per-segment node-count
+        statistics summed once over the (immutable) view and cached,
+        so the planner's per-query lookups are O(1) regardless of
+        segment count (the segmented stand-in for the node-centric
+        index's row extents)."""
+        if not self.n_cap or v is None or not (0 <= int(v) < self.n_cap):
+            return None
+        c = self._node_ops_sum
+        if c is None:
+            c = np.zeros((self.n_cap,), np.int64)
+            for s in self.segments:
+                c = c + s.node_counts(self.n_cap)
+            self._node_ops_sum = c  # benign race: idempotent value
+        return int(c[int(v)])
+
+    def window_range(self, t_lo, t_hi=None) -> tuple[int, int]:
+        """[i0, i1) segment-index range overlapping (t_lo, t_hi]
+        (``t_hi=None`` → through the end of the log)."""
+        i0 = int(np.searchsorted(self._tmax, t_lo, side="right"))
+        i1 = (len(self.segments) if t_hi is None
+              else int(np.searchsorted(self._tmin, t_hi, side="right")))
+        return i0, max(i0, i1)
+
+    # ----------------------------------------------------------- execution
+
+    def _materialize(self, sel: tuple[Segment, ...], cap: int) -> Delta:
+        n = sum(s.n_ops for s in sel)
+        if not sel:
+            return empty_delta(cap)
+        if len(sel) == 1 and cap == sel[0].capacity:
+            return sel[0].delta
+        pad = cap - n
+
+        def cat(field, fill):
+            parts = [getattr(s.delta, field)[:s.n_ops] for s in sel]
+            if pad:
+                parts.append(jnp.full((pad,), fill, jnp.int32))
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+        return Delta(op=cat("op", NOP), u=cat("u", 0), v=cat("v", 0),
+                     slot=cat("slot", 0), t=cat("t", T_PAD),
+                     n_ops=jnp.int32(n))
+
+    def _cached(self, sel: tuple[Segment, ...], cap: int) -> Delta:
+        # serving through a cached window still counts as touching its
+        # segments — otherwise the residency LRU would spill the very
+        # segments every request reads (and purge their hot window)
+        for s in sel:
+            s._touch = next(_CLOCK)
+        key = ((sel[0].uid, sel[-1].uid, len(sel), cap) if sel
+               else ("empty", cap))
+        with self._lock:
+            d = self._cache.get(key)
+            if d is not None:
+                self._cache.move_to_end(key)
+                return d
+        d = self._materialize(sel, cap)
+        with self._lock:
+            self._cache[key] = d
+            while len(self._cache) > self._cache_cap:
+                self._cache.popitem(last=False)
+        return d
+
+    def window_delta(self, t_lo, t_hi=None, *, pad_min: int = 64) -> Delta:
+        """ONE compact device Delta holding every op with t in
+        (t_lo, t_hi] — possibly more (whole overlapping segments are
+        taken), never fewer.  Kernels mask by time window, and relative
+        op order is preserved, so reconstruction/measure results are
+        bit-identical to running against the monolithic log.  pow2
+        capacity (floor ``pad_min``) bounds recompiles."""
+        i0, i1 = self.window_range(t_lo, t_hi)
+        sel = self.segments[i0:i1]
+        cap = _pow2(sum(s.n_ops for s in sel), pad_min)
+        return self._cached(sel, cap)
+
+    def full_delta(self, capacity: int | None = None) -> Delta:
+        """The whole log as one device Delta — the monolithic
+        compatibility view (node-index consumers, ``store.delta()``).
+        Op positions match the monolithic log exactly.  Cached per
+        capacity for the view's lifetime (never evicted by window
+        churn; callers opting into the full log opt into its
+        residency)."""
+        cap = max(1, capacity if capacity is not None else self.capacity)
+        if cap < self.n_ops:
+            raise ValueError(f"capacity {cap} < n_ops {self.n_ops}")
+        with self._lock:
+            d = self._full.get(cap)
+        if d is None:
+            d = self._materialize(self.segments, cap)
+            with self._lock:
+                self._full[cap] = d
+        return d
+
+    # ----------------------------------------------------------- residency
+
+    def device_bytes(self) -> int:
+        return sum(s.device_bytes() for s in self.segments
+                   if s.is_resident)
+
+    def _purge_windows_of(self, uids: set) -> None:
+        """Drop cached window materializations that contain any of the
+        given segments — a spill must release EVERY device reference
+        to the segment's arrays, or the residency budget is fiction
+        (uids are assigned in log order, so a key's (first, last) uid
+        pair brackets exactly the segments its window concatenated)."""
+        with self._lock:
+            for key in list(self._cache):
+                if key[0] == "empty":
+                    continue
+                u0, u1 = key[0], key[1]
+                if any(u0 <= u <= u1 for u in uids):
+                    del self._cache[key]
+
+    def ensure_device(self, budget: int | None = None, *,
+                      hot: int = 2) -> int:
+        """Epoch-swap residency pass: convert the ``hot`` newest
+        segments — the freshly sealed epoch plus, when future-dated
+        ops left one, the volatile tail snapshot (O(epoch ops) either
+        way) — leave older segments in whatever residency state
+        queries drove them to, and spill the least-recently-touched
+        resident segments down to the byte ``budget`` (None =
+        unlimited).  Returns resident bytes (cached multi-segment
+        window concatenations of still-resident segments are derived
+        copies on top of this, bounded by the window-cache entry
+        cap)."""
+        for s in self.segments[-hot:]:
+            s.delta  # noqa: B018 — property access builds the device log
+        if budget is not None:
+            keep = set(s.uid for s in self.segments[-hot:])
+            resident = sorted(
+                (s for s in self.segments if s.is_resident),
+                key=lambda s: s._touch)
+            total = sum(s.device_bytes() for s in resident)
+            spilled = set()
+            for s in resident:
+                if total <= budget:
+                    break
+                if s.uid in keep:
+                    continue
+                s.spill()
+                spilled.add(s.uid)
+                total -= s.device_bytes()
+            if spilled:
+                self._purge_windows_of(spilled)
+        return self.device_bytes()

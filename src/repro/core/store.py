@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core import queries as Q
 from repro.core.delta import (ADD_EDGE, ADD_NODE, NOP, REM_EDGE, REM_NODE,
-                              T_PAD, Delta)
+                              T_PAD, Delta, pow2_capacity)
 from repro.core.engine import HistoricalQueryEngine
 from repro.core.graph import (DenseGraph, EdgeGraph, dense_to_edge,
                               empty_edge)
@@ -31,6 +31,7 @@ from repro.core.index import NodeIndex, build_node_index_host
 from repro.core.materialize import (MaterializationPolicy, MaterializedStore)
 from repro.core.plans import Query, evaluate
 from repro.core.reconstruct import reconstruct_dense, reconstruct_edge
+from repro.core.segments import Segment, SegmentedDeltaView
 
 
 @dataclasses.dataclass
@@ -47,13 +48,29 @@ class TemporalGraphStore:
     def __init__(self, n_cap: int, e_cap: int | None = None,
                  policy: MaterializationPolicy | None = None,
                  enforce_invertible: bool = True,
-                 layout: str = "dense"):
+                 layout: str = "dense", segmented: bool = True,
+                 segment_min_ops: int = 64,
+                 segment_device_budget: int | None = None):
         """``layout="edge"`` keeps the current snapshot in edge-slot
         form only — O(E + N) state, no N² array anywhere in the store,
         which is what lets graphs past ~10⁴ nodes fit.  Queries then
         run through the engine's edge-layout kernels (measures without
         an edge implementation are unavailable).  Materialization
-        policies need the dense layout (snapshots are stored dense)."""
+        policies need the dense layout (snapshots are stored dense).
+
+        ``segmented=True`` (default) keeps the host log as a sequence
+        of immutable ``Segment``s split at materialized-anchor and
+        epoch-swap boundaries (``core.segments``): ingest appends to a
+        single open tail, an epoch swap seals + converts only that
+        tail, and queries materialize only the segments overlapping
+        their (anchor, t) window — results stay bit-identical to the
+        monolithic log.  ``segmented=False`` is the monolithic
+        baseline (one device log rebuilt from the full history).
+        ``segment_min_ops`` is the minimum tail size worth sealing
+        (smaller tails ride along as a volatile snapshot segment);
+        ``segment_device_budget`` caps the device bytes sealed
+        segments may occupy — cold segments are spilled to host and
+        reloaded on demand (None = keep everything resident)."""
         if layout not in ("dense", "edge"):
             raise ValueError(f"unknown layout {layout!r}")
         if layout == "edge" and policy is not None:
@@ -64,7 +81,15 @@ class TemporalGraphStore:
         self.e_cap = e_cap or 8 * n_cap
         self.t0 = 0
         self.t_cur = 0
-        # host-side delta log (python lists; O(1) append, converted lazily)
+        # Segmented host log: sealed immutable segments + ONE open tail
+        # (python lists; O(1) append, converted lazily).  The _*_l
+        # lists hold only the tail; sealed prefixes live in
+        # self._segments as compact numpy arrays + device deltas.
+        self.segmented = bool(segmented)
+        self.segment_min_ops = int(segment_min_ops)
+        self.segment_device_budget = segment_device_budget
+        self._segments: list[Segment] = []
+        self._t_sealed = 0            # time cut of the sealed prefix
         self._op_l: list[int] = []
         self._u_l: list[int] = []
         self._v_l: list[int] = []
@@ -100,6 +125,14 @@ class TemporalGraphStore:
         self._index_cache: NodeIndex | None = None
         self._engine_cache: HistoricalQueryEngine | None = None
         self._edge_cache: EdgeGraph | None = None
+        # Host-array caches (alongside _delta_cache, invalidated on
+        # append): _tail_cache holds the tail columns as numpy arrays,
+        # _host_cache the sealed+tail concatenation the _op/_u/...
+        # properties expose — property access used to re-convert the
+        # whole python list per call, O(M) each.
+        self._tail_cache: dict | None = None
+        self._host_cache: dict | None = None
+        self._view_cache: SegmentedDeltaView | None = None
 
     # ---------------------------------------------------------------- ingest
 
@@ -129,25 +162,67 @@ class TemporalGraphStore:
         self._slot_l.append(slot)
         self._t_l.append(t)
 
+    _COLS = ("op", "u", "v", "slot", "t")
+
+    def _tail_host(self) -> dict:
+        """The open tail as numpy columns (cached; the cached arrays
+        are immutable snapshots — appends build new ones)."""
+        if self._tail_cache is None:
+            self._tail_cache = {
+                "op": np.asarray(self._op_l, np.int32),
+                "u": np.asarray(self._u_l, np.int32),
+                "v": np.asarray(self._v_l, np.int32),
+                "slot": np.asarray(self._slot_l, np.int32),
+                "t": np.asarray(self._t_l, np.int32),
+            }
+        return self._tail_cache
+
+    def _host(self, col: str) -> np.ndarray:
+        """Full-log host column: sealed segments + tail, concatenated
+        (cached — tests/stats/compat path; the serving path never
+        needs the full concatenation)."""
+        if self._host_cache is None:
+            tail = self._tail_host()
+            self._host_cache = {
+                c: (np.concatenate(
+                    [getattr(s, c) for s in self._segments] + [tail[c]])
+                    if self._segments else tail[c])
+                for c in self._COLS}
+        return self._host_cache[col]
+
     @property
     def _op(self) -> np.ndarray:
-        return np.asarray(self._op_l, np.int32)
+        return self._host("op")
 
     @property
     def _u(self) -> np.ndarray:
-        return np.asarray(self._u_l, np.int32)
+        return self._host("u")
 
     @property
     def _v(self) -> np.ndarray:
-        return np.asarray(self._v_l, np.int32)
+        return self._host("v")
 
     @property
     def _slot(self) -> np.ndarray:
-        return np.asarray(self._slot_l, np.int32)
+        return self._host("slot")
 
     @property
     def _t(self) -> np.ndarray:
-        return np.asarray(self._t_l, np.int32)
+        return self._host("t")
+
+    @property
+    def log_len(self) -> int:
+        """Total ops across sealed segments + the open tail."""
+        return sum(s.n_ops for s in self._segments) + len(self._op_l)
+
+    def _invalidate(self) -> None:
+        self._delta_cache = None
+        self._index_cache = None
+        self._engine_cache = None
+        self._edge_cache = None
+        self._tail_cache = None
+        self._host_cache = None
+        self._view_cache = None
 
     def _apply_host(self, op: int, u: int, v: int) -> bool:
         """Apply to host mirror; returns False if op is an illegal
@@ -177,29 +252,50 @@ class TemporalGraphStore:
 
     def ingest(self, ops: Iterable[Op | tuple]) -> int:
         """Record a batch of update operations (paper Algorithm 3 lines
-        1–6).  Ops must be time-ordered and ≥ t_cur.  Returns #accepted.
+        1–6).  Ops must be time-ordered and strictly past ``t_cur`` —
+        ``advance_to`` closed every unit up to ``t_cur``, and its
+        half-open reconstruction window ``(t_cur, t_next]`` would never
+        apply an op AT ``t_cur`` to the current snapshot (the host
+        mirror would silently diverge from the device state; this is
+        the same immutable-served-history contract ``LiveGraphStore``
+        enforces at the swap boundary).  Returns #accepted.
         """
         n_acc = 0
-        for o in ops:
-            if not isinstance(o, Op):
-                o = Op(*o)
-            if o.t < self.t_cur:
-                raise ValueError("ops must be time-ordered (append-only)")
-            if o.op == REM_NODE and self.enforce_invertible:
-                # Paper §2.1: record remEdge for every live incident edge
-                # first, same time point, so the delta stays invertible.
-                for (a, b), live in list(self._adj_host.items()):
-                    if live and (a == o.u or b == o.u):
-                        if self._apply_host(REM_EDGE, a, b):
-                            self._append(REM_EDGE, a, b, o.t)
-                            n_acc += 1
-            if self._apply_host(o.op, o.u, o.v):
-                self._append(o.op, o.u, o.v, o.t)
-                n_acc += 1
-        self._delta_cache = None
-        self._index_cache = None
-        self._engine_cache = None
-        self._edge_cache = None
+        try:
+            for o in ops:
+                if not isinstance(o, Op):
+                    o = Op(*o)
+                if o.t <= self.t_cur:
+                    raise ValueError(
+                        f"op at t={o.t} is at or before "
+                        f"t_cur={self.t_cur}; closed time units are "
+                        "immutable (ops must be time-ordered and "
+                        "strictly past t_cur)")
+                if self._t_l and o.t < self._t_l[-1]:
+                    # the log's t column must be non-decreasing: every
+                    # binary search (temporal index, seal cuts, advance
+                    # counting) assumes it — enforce, don't corrupt
+                    raise ValueError(
+                        f"ops must be time-ordered: got t={o.t} after "
+                        f"t={self._t_l[-1]}")
+                if o.op == REM_NODE and self.enforce_invertible:
+                    # Paper §2.1: record remEdge for every live incident
+                    # edge first, same time point, so the delta stays
+                    # invertible.
+                    for (a, b), live in list(self._adj_host.items()):
+                        if live and (a == o.u or b == o.u):
+                            if self._apply_host(REM_EDGE, a, b):
+                                self._append(REM_EDGE, a, b, o.t)
+                                n_acc += 1
+                if self._apply_host(o.op, o.u, o.v):
+                    self._append(o.op, o.u, o.v, o.t)
+                    n_acc += 1
+        finally:
+            # invalidate even when a mid-batch op raises: the accepted
+            # prefix is already in the log and host mirror, and stale
+            # caches would hide it from delta()/advance_to
+            if n_acc:
+                self._invalidate()
         return n_acc
 
     def advance_to(self, t_next: int) -> None:
@@ -207,8 +303,21 @@ class TemporalGraphStore:
         temporary delta to SG_tcur, append it to the interval delta (the
         host log already holds it), and maybe materialize."""
         assert t_next >= self.t_cur
-        new_ops = int(np.sum(self._t > self.t_cur)) if len(self._t) else 0
-        delta = self.delta()
+        # Ops of the units being closed: only those in (t_cur, t_next]
+        # count toward the materialization budget — future-dated ops
+        # (t > t_next) will be counted by the advance that closes their
+        # unit, not by every advance before it.  Sealed segments only
+        # hold ops ≤ the last seal time ≤ t_cur, so the tail suffices.
+        tail_t = self._tail_host()["t"]
+        new_ops = int(np.searchsorted(tail_t, t_next, side="right")
+                      - np.searchsorted(tail_t, self.t_cur, side="right"))
+        if self.segmented:
+            # only the segments overlapping (t_cur, t_next] — the open
+            # tail plus at most a boundary segment — are materialized,
+            # so closing a unit costs O(ops in it), not O(history)
+            delta = self.delta_view().window_delta(self.t_cur, t_next)
+        else:
+            delta = self.delta()
         if self.layout == "edge":
             # rebase the anchor onto the latest (append-only) registry
             # first, so ops on newly registered slots land in range
@@ -231,27 +340,107 @@ class TemporalGraphStore:
                 self.materialized.add(t_next, self.current)
                 self._ops_since_mat = 0
                 self._t_last_mat = t_next
+                # materialized anchors are segment boundaries: the log
+                # up to the anchor seals into an immutable segment
+                self.seal_tail(t_next)
+
+    # ------------------------------------------------------------- segments
+
+    def seal_tail(self, t_seal: int | None = None, *,
+                  force: bool = False) -> int:
+        """Seal the open tail's ops with t ≤ ``t_seal`` (default
+        ``t_cur``) into an immutable ``Segment`` — the epoch-swap /
+        materialized-anchor boundary cut.  Tails smaller than
+        ``segment_min_ops`` are left open unless ``force`` (a volatile
+        snapshot segment represents them in ``delta_view``), so
+        pathological swap cadences don't shatter the log into
+        thousands of tiny segments.  Returns #ops sealed."""
+        if not self.segmented:
+            return 0
+        t_seal = self.t_cur if t_seal is None else int(t_seal)
+        if t_seal > self.t_cur:
+            # sealing an open unit would let a later ingest (t > t_cur
+            # but below the seal) slip BEHIND the sealed segment,
+            # breaking the time-disjointness every binary search over
+            # segments assumes
+            raise ValueError(f"cannot seal at t={t_seal} past "
+                             f"t_cur={self.t_cur}: the unit is open")
+        if t_seal <= self._t_sealed:
+            return 0
+        tail = self._tail_host()
+        k = int(np.searchsorted(tail["t"], t_seal, side="right"))
+        if k == 0 or (k < self.segment_min_ops and not force):
+            return 0
+        self._segments.append(Segment(
+            tail["op"][:k].copy(), tail["u"][:k].copy(),
+            tail["v"][:k].copy(), tail["slot"][:k].copy(),
+            tail["t"][:k].copy()))
+        self._op_l = self._op_l[k:]
+        self._u_l = self._u_l[k:]
+        self._v_l = self._v_l[k:]
+        self._slot_l = self._slot_l[k:]
+        self._t_l = self._t_l[k:]
+        self._t_sealed = t_seal
+        # log content is unchanged — only the host partitioning moved,
+        # so the (content-addressed) delta/index/engine caches survive
+        self._tail_cache = None
+        self._host_cache = None
+        self._view_cache = None
+        return k
+
+    def delta_view(self) -> SegmentedDeltaView:
+        """The segmented Δ[t0, tcur]: sealed segments plus (when the
+        tail is non-empty) one volatile segment snapshotting the tail.
+        The snapshot is immutable — later appends build new tail
+        arrays — so a frozen engine holding this view never observes
+        subsequent ingest (the view's window cache is per-view for the
+        same reason: a swap building the next view must not mutate
+        cache state a frozen epoch is serving from)."""
+        if not self.segmented:
+            raise ValueError("monolithic store has no segment view "
+                             "(segmented=False)")
+        if self._view_cache is None:
+            segs = list(self._segments)
+            if self._op_l:
+                tail = self._tail_host()
+                segs.append(Segment(tail["op"], tail["u"], tail["v"],
+                                    tail["slot"], tail["t"],
+                                    sealed=False))
+            self._view_cache = SegmentedDeltaView(
+                segs, n_cap=self.n_cap, cap_min=self.delta_cap_min)
+        return self._view_cache
 
     # ---------------------------------------------------------------- views
 
     def delta(self, capacity: int | None = None) -> Delta:
-        """The interval delta Δ[t0, tcur] as device arrays (cached)."""
+        """The full interval delta Δ[t0, tcur] as device arrays
+        (cached) — the monolithic compatibility view; segment-aware
+        consumers (the engine) go through ``delta_view`` and touch
+        only window-overlapping segments."""
         if self._delta_cache is not None and capacity is None:
             return self._delta_cache
-        n = len(self._op)
-        cap = capacity or max(1, self.delta_cap_min,
-                              1 << int(np.ceil(np.log2(max(n, 1)))))
-        pad = cap - n
-        d = Delta(
-            op=jnp.asarray(np.concatenate([self._op,
-                                           np.full(pad, NOP, np.int32)])),
-            u=jnp.asarray(np.concatenate([self._u, np.zeros(pad, np.int32)])),
-            v=jnp.asarray(np.concatenate([self._v, np.zeros(pad, np.int32)])),
-            slot=jnp.asarray(np.concatenate([self._slot,
-                                             np.zeros(pad, np.int32)])),
-            t=jnp.asarray(np.concatenate([self._t,
-                                          np.full(pad, T_PAD, np.int32)])),
-            n_ops=jnp.int32(n))
+        n = self.log_len
+        if capacity is not None and capacity < n:
+            # mirror delta_from_numpy: fail loudly up front instead of
+            # letting the negative pad crash deep inside np.full
+            raise ValueError(f"capacity {capacity} < n_ops {n}")
+        cap = capacity or pow2_capacity(n, max(1, self.delta_cap_min))
+        if self.segmented:
+            d = self.delta_view().full_delta(cap)
+        else:
+            pad = cap - n
+            d = Delta(
+                op=jnp.asarray(np.concatenate(
+                    [self._op, np.full(pad, NOP, np.int32)])),
+                u=jnp.asarray(np.concatenate(
+                    [self._u, np.zeros(pad, np.int32)])),
+                v=jnp.asarray(np.concatenate(
+                    [self._v, np.zeros(pad, np.int32)])),
+                slot=jnp.asarray(np.concatenate(
+                    [self._slot, np.zeros(pad, np.int32)])),
+                t=jnp.asarray(np.concatenate(
+                    [self._t, np.full(pad, T_PAD, np.int32)])),
+                n_ops=jnp.int32(n))
         if capacity is None:
             self._delta_cache = d
         return d
@@ -262,6 +451,13 @@ class TemporalGraphStore:
         code (anchor costing, workload materialization) binary-searches
         this instead of syncing ``delta().t`` off device."""
         return self._t
+
+    def op_count_source(self):
+        """The cheapest object answering "#ops between two times":
+        the segment view (O(log S) per window, no full-log concat) for
+        segmented stores, the cached host timestamp array otherwise.
+        ``serving.policy`` costs anchor placements against this."""
+        return self.delta_view() if self.segmented else self.op_times_host()
 
     def node_index(self) -> NodeIndex:
         if self._index_cache is None:
@@ -278,7 +474,7 @@ class TemporalGraphStore:
         if self._edge_cache is not None:
             return self._edge_cache
         n = self._next_edge_slot
-        e_cap = max(1, 1 << int(np.ceil(np.log2(max(n, 1)))))
+        e_cap = pow2_capacity(n)
         eu = np.zeros((e_cap,), np.int32)
         ev = np.zeros((e_cap,), np.int32)
         emask = np.zeros((e_cap,), bool)
@@ -332,7 +528,7 @@ class TemporalGraphStore:
         (``engine.cache_hits``/``cache_misses`` count them).  An
         edge-layout store returns an ``EdgeGraph``.
         """
-        delta = self.delta()
+        delta = self.delta_view() if self.segmented else self.delta()
         anchor_id = -1
         if use_materialized and self.materialized.times:
             selector = self.engine().selector
@@ -344,11 +540,16 @@ class TemporalGraphStore:
         if not windowed:
             return self.engine().reconstruct_cached(anchor_id, t,
                                                     layout=self.layout)
-        from repro.core.index import count_window_ops, gather_window
-        n_win = int(count_window_ops(delta, min(t, t_a), max(t, t_a)))
-        cap = max(64, 1 << int(np.ceil(np.log2(max(n_win, 1)))))
-        if cap < delta.capacity:
-            delta = gather_window(delta, min(t, t_a), max(t, t_a), cap)
+        if self.segmented:
+            # segment selection IS the window slice: materialize only
+            # the segments overlapping (anchor, t)
+            delta = delta.window_delta(min(t, t_a), max(t, t_a))
+        else:
+            from repro.core.index import count_window_ops, gather_window
+            n_win = int(count_window_ops(delta, min(t, t_a), max(t, t_a)))
+            cap = pow2_capacity(n_win, 64)
+            if cap < delta.capacity:
+                delta = gather_window(delta, min(t, t_a), max(t, t_a), cap)
         if self.layout == "edge":
             return reconstruct_edge(self.current_edge_snapshot()
                                     if anchor_id == -1 else g_a,
@@ -397,7 +598,10 @@ class TemporalGraphStore:
         from repro.sharding.graph import (rows_divisible, single_device,
                                           slots_divisible)
         if not single_device(mesh):
-            eng._replicated(mesh, "delta", eng.delta)
+            if eng.view is None:
+                # segmented engines replicate per-group window deltas
+                # lazily (the full log never materializes on device)
+                eng._replicated(mesh, "delta", eng.delta)
             if eng.current is not None:
                 eng._replicated(mesh, "current", eng.current)
                 if rows_divisible(self.n_cap, mesh):
@@ -423,7 +627,17 @@ class TemporalGraphStore:
         calls (its arrays are snapshots), so a serving layer can keep
         answering from it while the store absorbs the next epoch's
         writes and freezes again."""
-        self.delta()                     # device conversion of the log
+        if self.segmented:
+            # Seal the epoch's tail and convert ONLY it — the sealed
+            # history is already device-resident from previous freezes
+            # (successive epochs share those arrays by reference), so
+            # the swap's conversion cost is O(ops since the last swap),
+            # not O(total history).  The residency pass then spills
+            # cold segments past the byte budget back to host.
+            self.seal_tail(self.t_cur)
+            self.delta_view().ensure_device(self.segment_device_budget)
+        else:
+            self.delta()                 # device conversion of the log
         if self.layout == "edge":
             # rebase the serving snapshot onto the grown registry once,
             # host-side, instead of per query

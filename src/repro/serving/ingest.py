@@ -80,6 +80,15 @@ class LiveGraphStore:
     queries (set it to the frontend's micro-batch size): fragmented
     batches then reuse one compiled program per group key instead of
     one per occupancy.
+
+    With the (default) segmented store, a swap seals the epoch's ops
+    into an immutable ``Segment`` and converts ONLY that tail to
+    device arrays — successive frozen epochs share the sealed
+    history's device arrays by reference, so swap cost is O(ops since
+    the last swap) instead of O(total history).
+    ``segment_device_budget`` bounds the device bytes the sealed log
+    may hold: cold segments are spilled to host at the swap and
+    reloaded on demand when a query window touches them.
     """
 
     def __init__(self, n_cap: int = 0, *, e_cap: int | None = None,
@@ -87,9 +96,20 @@ class LiveGraphStore:
                  indexed: bool = False, node_cap: int = 1024,
                  delta_cap_hint: int | None = None,
                  group_pad_min: int = 1,
+                 segment_device_budget: int | None = None,
                  store: TemporalGraphStore | None = None):
         if store is None:
             store = TemporalGraphStore(n_cap, e_cap=e_cap, layout=layout)
+        if segment_device_budget is not None:
+            if not store.segmented:
+                raise ValueError(
+                    "segment_device_budget needs a segmented store "
+                    "(the monolithic log keeps the full history "
+                    "device-resident)")
+            # host-residency budget for the segmented delta log: cold
+            # sealed segments past this many device bytes are spilled
+            # to host at each swap and reloaded on demand
+            store.segment_device_budget = int(segment_device_budget)
         if policy is not None and store.layout != "dense":
             raise ValueError("materialization policies need the dense "
                              "layout (snapshots are stored dense)")

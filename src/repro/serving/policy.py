@@ -103,13 +103,16 @@ class WorkloadStats:
             self.total = sum(self._w.values())
 
 
-def _ops_between(t_sorted: np.ndarray, t_a: int, t_b: int) -> int:
+def _ops_between(t_sorted, t_a: int, t_b: int) -> int:
     """#log ops in the (t_lo, t_hi] window between two times — the
-    AnchorSelector's exact cost proxy, host-side binary searches."""
+    AnchorSelector's exact cost proxy.  ``t_sorted`` is either a host
+    timestamp array or a ``SegmentedDeltaView`` (per-segment op
+    counts — the segmented store never concatenates its full
+    timestamp column just to cost anchors); the counting rule itself
+    is the planner's, shared via ``core.segments``."""
+    from repro.core.segments import window_ops_count
     lo, hi = (t_a, t_b) if t_a <= t_b else (t_b, t_a)
-    i0 = np.searchsorted(t_sorted, lo, side="right")
-    i1 = np.searchsorted(t_sorted, hi, side="right")
-    return int(i1 - i0)
+    return window_ops_count(t_sorted, lo, hi)
 
 
 @dataclasses.dataclass
@@ -210,8 +213,11 @@ class WorkloadMaterializationPolicy:
         if getattr(store, "layout", "dense") != "dense":
             raise ValueError("materialization needs the dense layout "
                              "(snapshots are stored dense)")
+        t_src = (store.op_count_source()
+                 if hasattr(store, "op_count_source")
+                 else store.op_times_host())
         res = self.plan(stats=stats, existing=store.materialized.times,
-                        t_sorted=store.op_times_host(), t_cur=store.t_cur,
+                        t_sorted=t_src, t_cur=store.t_cur,
                         bytes_per_snapshot=_snapshot_bytes(store.current))
         for t in res.evicted:
             store.materialized.remove(t)

@@ -124,6 +124,91 @@ def test_sequential_matches_vectorized(small_history):
         assert bool(jnp.all(a.nodes == b.nodes)), t
 
 
+# ---------------------------------------------------------------------------
+# Store time-unit boundary regressions (PR 5)
+# ---------------------------------------------------------------------------
+
+
+def test_ingest_rejects_ops_at_closed_time_units():
+    """Ops at t == t_cur used to be accepted into the log (only
+    t < t_cur was rejected), but advance_to's half-open reconstruction
+    window (t_cur, t_next] never applied them — the host mirror and
+    edge registry silently diverged from the device current snapshot.
+    The store now rejects them up front, the same immutable-history
+    contract LiveGraphStore enforces at the swap boundary."""
+    from repro.core.store import Op, TemporalGraphStore
+    s = TemporalGraphStore(n_cap=8)
+    s.ingest([Op(ADD_NODE, 0, 0, 1), Op(ADD_NODE, 1, 1, 1)])
+    s.advance_to(2)
+    with pytest.raises(ValueError, match="immutable"):
+        s.ingest([Op(ADD_EDGE, 0, 1, 2)])   # t == t_cur: closed unit
+    with pytest.raises(ValueError, match="immutable"):
+        s.ingest([Op(ADD_EDGE, 0, 1, 1)])   # t < t_cur still rejected
+    # the rejected ops never reached the log; state stays consistent
+    assert s.stats()["total_ops"] == 2
+    s.ingest([Op(ADD_EDGE, 0, 1, 3)])
+    s.advance_to(3)
+    assert int(s.current.num_edges()) == 1
+    assert s.stats()["live_edges"] == 1
+    # intra-batch time ordering is enforced too (every binary search —
+    # temporal index, seal cuts, advance counting — assumes sorted t)
+    with pytest.raises(ValueError, match="time-ordered"):
+        s.ingest([Op(ADD_NODE, 5, 5, 7), Op(ADD_NODE, 6, 6, 5)])
+    # ...and the accepted prefix of a failed batch is still visible:
+    # caches must invalidate even on a mid-batch raise
+    assert s.stats()["total_ops"] == 4
+    assert int(s.delta().n_ops) == 4 and s.op_times_host()[-1] == 7
+
+
+def test_advance_counts_only_ops_of_closed_units():
+    """advance_to used to count every op with t > t_cur as "new", so
+    future-dated ops were re-counted by every later advance —
+    _ops_since_mat drifted and the op-count materialization policy
+    fired early.  Only ops in (t_cur, t_next] may count."""
+    from repro.core.store import Op, TemporalGraphStore
+    s = TemporalGraphStore(n_cap=8)
+    s.ingest([Op(ADD_NODE, i, i, 1) for i in range(4)]
+             + [Op(ADD_EDGE, 0, 1, 2)]
+             + [Op(ADD_EDGE, 1, 2, 9), Op(ADD_EDGE, 2, 3, 9)])  # future
+    s.advance_to(2)         # closes units 1..2: 5 ops
+    assert s._ops_since_mat == 5
+    s.advance_to(5)         # closes 3..5: no ops — t=9 must NOT recount
+    assert s._ops_since_mat == 5
+    s.advance_to(9)         # the two t=9 ops finally close
+    assert s._ops_since_mat == 7
+    assert int(s.current.num_edges()) == 3
+
+
+def test_delta_capacity_below_n_ops_raises():
+    """store.delta(capacity < n_ops) used to compute a negative pad and
+    crash deep inside np.full with a cryptic error; it now raises a
+    ValueError up front, mirroring delta_from_numpy."""
+    from repro.core.store import Op, TemporalGraphStore
+    for segmented in (True, False):
+        s = TemporalGraphStore(n_cap=8, segmented=segmented)
+        s.ingest([Op(ADD_NODE, i, i, 1) for i in range(6)])
+        with pytest.raises(ValueError, match="capacity"):
+            s.delta(capacity=4)
+        d = s.delta(capacity=8)
+        assert d.capacity == 8 and int(d.n_ops) == 6
+
+
+def test_host_array_caches_invalidate_on_append():
+    """The _op/_u/_v/_slot/_t properties and op_times_host re-converted
+    the whole python list per access (O(M) each — 4 conversions per
+    stats() call); they are now cached alongside _delta_cache and
+    invalidated on append."""
+    from repro.core.store import Op, TemporalGraphStore
+    s = TemporalGraphStore(n_cap=8)
+    s.ingest([Op(ADD_NODE, i, i, 1) for i in range(4)])
+    a = s.op_times_host()
+    assert s.op_times_host() is a and s._t is a  # cached, no re-convert
+    assert s._op is s._op
+    s.ingest([Op(ADD_EDGE, 0, 1, 2)])
+    b = s.op_times_host()
+    assert b is not a and b.shape[0] == a.shape[0] + 1
+
+
 def test_gather_window_suffix_clamp_regression(small_history):
     """gather_window used to let dynamic_slice clamp an out-of-range
     start (i0 + window_cap > capacity) back toward 0, silently swapping

@@ -508,6 +508,61 @@ def test_delta_cap_hint_keeps_shapes_stable():
                                   t_k=2))) == 1
 
 
+def test_epoch_swaps_share_sealed_segments():
+    """Successive frozen epochs hold the sealed history by reference:
+    a swap seals + converts ONLY the epoch's tail, so earlier
+    segments' device arrays are shared, not rebuilt (the O(epoch-ops)
+    swap contract of the segmented delta log)."""
+    ops = _gen_ops(seed=9)
+    t_max = ops[-1].t
+    cuts = [_cut_at_time(ops, t_max // 3), _cut_at_time(ops, 2 * t_max // 3),
+            len(ops)]
+    store = TemporalGraphStore(n_cap=N_CAP, segment_min_ops=4)
+    live = LiveGraphStore(store=store)
+    views, lo = [], 0
+    for cut in cuts:
+        live.append(ops[lo:cut])
+        lo = cut
+        live.swap()
+        views.append(live.engine.view)
+    assert len(views[-1].segments) > len(views[-2].segments)
+    for a, b in zip(views[-2].segments, views[-1].segments):
+        assert a is b and a.delta is b.delta   # shared device arrays
+    # and the shared state still serves exactly
+    rng = np.random.default_rng(4)
+    qs = _mixed_queries(live.t_served, rng, n=8)
+    _assert_bitequal(live.evaluate_many(qs),
+                     _oracle(ops).evaluate_many(qs), "segment sharing")
+
+
+def test_segment_device_budget_spills_cold_segments():
+    """The host-residency knob: under a byte budget the swap spills
+    cold sealed segments off-device; queries into spilled history
+    still answer exactly (reload on demand)."""
+    ops = _gen_ops(seed=10)
+    t_max = ops[-1].t
+    store = TemporalGraphStore(n_cap=N_CAP, segment_min_ops=2)
+    live = LiveGraphStore(store=store, segment_device_budget=1)
+    lo = 0
+    for t_mid in (t_max // 3, 2 * t_max // 3, t_max):
+        cut = _cut_at_time(ops, t_mid)
+        if cut > lo:
+            live.append(ops[lo:cut])
+            lo = cut
+        live.swap()
+    view = live.engine.view
+    assert len(view.segments) >= 3
+    # the budget (1 byte) can keep nothing resident except the two
+    # protected hot segments (the freshly sealed epoch and, when
+    # future-dated ops left one, the volatile tail)
+    assert not any(s.is_resident for s in view.segments[:-2])
+    assert view.segments[-1].is_resident
+    rng = np.random.default_rng(5)
+    qs = _mixed_queries(live.t_served, rng, n=8)
+    _assert_bitequal(live.evaluate_many(qs),
+                     _oracle(ops[:lo]).evaluate_many(qs), "spilled serve")
+
+
 def test_group_pad_min_bounds_shapes_and_keeps_parity():
     """group_pad_min pads fragmented groups to one program shape;
     results stay bit-identical to the unpadded executor."""
@@ -522,6 +577,14 @@ def test_group_pad_min_bounds_shapes_and_keeps_parity():
     _assert_bitequal(live_pad.evaluate_many(qs),
                      live_ref.evaluate_many(qs), "group_pad_min")
     assert live_pad.engine.group_pad_min == 8
+
+
+def test_segment_budget_rejects_monolithic_store():
+    """A residency budget on a monolithic store would be a silent
+    no-op (the full log stays device-resident); fail loudly instead."""
+    with pytest.raises(ValueError, match="segmented"):
+        LiveGraphStore(store=TemporalGraphStore(8, segmented=False),
+                       segment_device_budget=1 << 20)
 
 
 def test_edge_layout_rejects_materialization_policy():
