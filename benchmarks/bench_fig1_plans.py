@@ -7,6 +7,10 @@ measured in #ops applied), for the four plans:
 plus the paper-faithful *sequential* two-phase baseline (one-op-at-a-
 time replay — what the Java/Neo4j implementation does) so the
 beyond-paper vectorized gain is visible (EXPERIMENTS.md §Perf).
+
+Audited against the segmented-by-default store: ``store.delta()`` is
+the monolithic compat view (``SegmentedDeltaView.full_delta``), so the
+plan timings here measure the same device log as before segmentation.
 """
 from __future__ import annotations
 

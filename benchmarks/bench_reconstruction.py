@@ -2,7 +2,11 @@
 sequential replay vs the vectorized last-writer-wins (beyond-paper) vs
 the Pallas delta_apply kernel (interpret mode on CPU — reported for
 completeness, its target is TPU), and the effect of materialized
-snapshots with time- vs operation-based selection."""
+snapshots with time- vs operation-based selection.
+
+Audited against the segmented-by-default store: ``store.delta()`` and
+``snapshot_at`` route through the segmented view unchanged, so these
+numbers remain comparable across the segmentation PRs."""
 from __future__ import annotations
 
 import time

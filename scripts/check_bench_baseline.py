@@ -37,6 +37,12 @@ BENCHES = {
     "segments": ("benchmarks/bench_segments.py",
                  "benchmarks/BENCH_segments.json",
                  ("smoke", "swaps_per_sec")),
+    # whole-sweep (evolve) dispatch throughput on the dense layout — a
+    # regression to per-sample dispatch (B programs instead of one
+    # scan) tanks this number first
+    "sweep": ("benchmarks/bench_sweep.py",
+              "benchmarks/BENCH_sweep.json",
+              ("smoke", "sweeps_per_sec")),
 }
 
 

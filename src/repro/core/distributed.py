@@ -400,6 +400,77 @@ def _two_phase_slots_local(nodes, eu_l, ev_l, emask_l, n_reg, delta,
 
 
 # ---------------------------------------------------------------------------
+# Sharded group execution: slot-sharded incremental time sweeps (evolve)
+# ---------------------------------------------------------------------------
+
+_EVOLVE_SLOT_CACHE: dict = {}
+
+
+def evolve_slots(mesh: Mesh, anchor: EdgeGraph, d_rec: Delta, d_net: Delta,
+                 t_anchor, t_los, widths, vs, *, measure: str, scope: str,
+                 stride: int, num_buckets: int):
+    """One evolve (sweep) group as a slot-parallel program.
+
+    The expensive half of a sweep is the one LWW reconstruction at each
+    query's t_lo — so that is what shards: each device reconstructs only
+    its slot block (O(E/D) scatter) and emits integer partials of the
+    start state (per-node degree counts from local edges, local live-
+    edge count; the replicated node mask contributes from shard 0 only,
+    exactly the ``_slot_parts`` convention).  ONE psum of those integer
+    partials rebuilds the exact start state on every device — the same
+    exactness argument as ``two_phase_slots`` — and the cheap half (the
+    per-sample net scatter + measure scan over the replicated ``d_net``)
+    runs replicated, so every device holds the identical result and the
+    outputs bit-match the single-device ``batch_evolve``.
+    """
+    key = (mesh, measure, scope, stride, num_buckets)
+    fn = _EVOLVE_SLOT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map(
+            functools.partial(_evolve_slots_local, measure=measure,
+                              scope=scope, stride=stride,
+                              num_buckets=num_buckets),
+            mesh=mesh,
+            in_specs=(P(), P(AXIS), P(AXIS), P(AXIS), P(), P(), P(), P(),
+                      P(), P(), P()),
+            out_specs=P()))
+        _EVOLVE_SLOT_CACHE[key] = fn
+    return fn(anchor.nodes, anchor.eu, anchor.ev, anchor.emask,
+              anchor.n_edges_reg, d_rec, d_net, t_anchor, t_los, widths,
+              vs)
+
+
+def _evolve_slots_local(nodes, eu_l, ev_l, emask_l, n_reg, d_rec, d_net,
+                        t_anchor, t_los, widths, vs, *, measure, scope,
+                        stride, num_buckets):
+    from repro.kernels.evolve_sweep.ops import sweep_nets, sweep_scan
+    e_loc = emask_l.shape[0]
+    n = nodes.shape[0]
+    slot0 = jax.lax.axis_index(AXIS) * e_loc
+    reg_l = (slot0 + jnp.arange(e_loc, dtype=jnp.int32)) < n_reg
+    on_zero = jax.lax.axis_index(AXIS) == 0
+
+    def one(t_lo, width, v):
+        em = _slot_lww(emask_l, d_rec, t_anchor, t_lo, slot0)
+        nd = _node_lww(nodes, d_rec, t_anchor, t_lo)
+        live = (em & reg_l).astype(jnp.int32)
+        deg_p = (jnp.zeros((n,), jnp.int32).at[eu_l].add(live)
+                 .at[ev_l].add(live))
+        ne_p = jnp.sum(live)
+        nn_p = jnp.where(on_zero, jnp.sum(nd.astype(jnp.int32)),
+                         jnp.int32(0))
+        nodes_p = jnp.where(on_zero, nd.astype(jnp.int32),
+                            jnp.zeros((n,), jnp.int32))
+        deg0, nodes0, nn0, ne0 = jax.lax.psum(
+            (deg_p, nodes_p, nn_p, ne_p), AXIS)
+        nets = sweep_nets(d_net, t_lo, t_lo + (width - 1) * stride,
+                          stride, num_buckets, n)
+        return sweep_scan(measure, scope, v, deg0, nodes0, nn0, ne0, nets)
+
+    return jax.vmap(one)(t_los, widths, vs)
+
+
+# ---------------------------------------------------------------------------
 # Row-parallel reconstruction
 # ---------------------------------------------------------------------------
 

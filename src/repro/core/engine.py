@@ -263,6 +263,16 @@ class Planner:
     def choose(self, q: Query, delta: Delta, t_cur: int) -> PlanChoice:
         plans = applicable_plans(q)
         anchor = self.selector.select(q.t_k, delta, self.selection)
+        if q.kind == "evolve":
+            # The sweep executor reconstructs ONCE at t_lo and scans the
+            # window incrementally — the planner's only real choices are
+            # the anchor (nearest to t_lo, same Theorem-1 costing as any
+            # two-phase query) and the layout.  Partial / windowed /
+            # indexed are point-plan concepts and stay off.
+            return PlanChoice(plan="two_phase", anchor_id=anchor.anchor_id,
+                              t_anchor=anchor.t,
+                              layout=self.layout_for(q, "two_phase"),
+                              cost=anchor.cost)
         # two-phase traverses the anchor→query window and pays the dense
         # scatter; partial reconstruction (node scope) reduces the
         # scatter to the closure rows.
@@ -329,6 +339,7 @@ class Planner:
         from repro.core.distributed import ROW_MEASURES, SLOT_MEASURES
         if n_dev <= 1:
             return None
+        evolve = getattr(key, "kind", "") == "evolve"
         if key.plan == "two_phase" and getattr(key, "layout",
                                                "dense") == "edge":
             # Slot-sharding: the LWW slot scatter splits over the slot
@@ -336,8 +347,12 @@ class Planner:
             # like row-sharding (slots partition the edge set, so
             # per-shard popcounts/degree counts sum to the global
             # value — same exactness argument, 1-D instead of 2-D).
-            if (key.measure in SLOT_MEASURES and self.e_cap
-                    and self.e_cap % n_dev == 0):
+            # evolve additionally admits degree_distribution: the sweep
+            # carries full psum'd degree counts, so the histogram is a
+            # replicated finalization, not a partial.
+            slot_ok = (key.measure in SLOT_MEASURES
+                       or (evolve and key.measure == "degree_distribution"))
+            if slot_ok and self.e_cap and self.e_cap % n_dev == 0:
                 # per query: one masked log scan + one slot scatter
                 work = b * max(delta_cap, self.e_cap)
                 if force or work - work // n_dev > self.dispatch_overhead:
@@ -345,9 +360,11 @@ class Planner:
         elif key.plan == "two_phase":
             # Row-sharding needs a row-decomposable measure, an even
             # row split, and no partial reconstruction (the closure
-            # mask is a full-graph object).
+            # mask is a full-graph object).  Evolve's dense path has no
+            # row-sharded sweep — it batch-shards instead (the sharded
+            # sweep is the slot path above).
             if (key.measure in ROW_MEASURES and not key.partial
-                    and self.n_cap % n_dev == 0):
+                    and not evolve and self.n_cap % n_dev == 0):
                 # one dense LWW scatter per query (agg kinds do one per
                 # bucket — strictly more, so the bound is conservative)
                 work = b * (self.n_cap ** 2 // 64)
@@ -650,6 +667,7 @@ class _GroupKey:
     windowed: bool
     partial: bool
     layout: str = "dense"
+    stride: int = 0     # 0 unless kind == "evolve" (sweep sample step)
 
 
 class GroupStats(list):
@@ -874,7 +892,9 @@ class HistoricalQueryEngine:
             t_a, g_a = self.edge_anchor(anchor_id)
         else:
             t_a, g_a = self.selector.get(anchor_id)
-        d = (self.view.window_delta(min(t_a, t), max(t_a, t))
+        # single-window LWW reconstruction masks exactly at the window
+        # bounds, so the merged-delta tree may cover the whole window
+        d = (self.view.window_delta(min(t_a, t), max(t_a, t), merged=True)
              if self.view is not None else self.delta)
         if layout == "edge":
             g = reconstruct_edge(g_a, d, t_a, t)
@@ -953,6 +973,11 @@ class HistoricalQueryEngine:
         if c.layout == "edge":
             # partial reconstruction is a dense-rows concept
             c = dataclasses.replace(c, partial=False)
+        if q.kind == "evolve":
+            # the sweep executor does its own (full) reconstruction and
+            # windowing — forced point-plan variants must not leak in
+            c = dataclasses.replace(c, indexed=False, windowed=False,
+                                    partial=False)
         return c
 
     def _group_key(self, q: Query, c: PlanChoice) -> _GroupKey:
@@ -960,7 +985,8 @@ class HistoricalQueryEngine:
                          measure=q.measure, agg=q.agg if q.kind == "agg"
                          else "", anchor_id=c.anchor_id,
                          indexed=c.indexed, windowed=c.windowed,
-                         partial=c.partial, layout=c.layout)
+                         partial=c.partial, layout=c.layout,
+                         stride=q.stride if q.kind == "evolve" else 0)
 
     # ------------------------------------------------------------ execution
 
@@ -976,6 +1002,23 @@ class HistoricalQueryEngine:
         t_lo = int(min(ts.min(), t_anchor))
         t_hi = int(max(ts.max(), t_anchor))
         if self.view is not None:
+            # Merged-tree nodes are only safe where every reconstruction
+            # window in the group fully contains them (the LWW collapse
+            # dropped superseded ops, so a window that *straddles* a
+            # node would read a torn state).  Every window runs between
+            # the anchor and one query time, so the common fully-covered
+            # subrange is (t_anchor, min ts] going forward / (max ts,
+            # t_anchor] going backward; a mixed-direction group keeps
+            # leaves everywhere.
+            ts_min, ts_max = int(ts.min()), int(ts.max())
+            if ts_min >= t_anchor:
+                return self.view.window_delta(t_lo, t_hi, merged=True,
+                                              merged_lo=t_anchor,
+                                              merged_hi=ts_min)
+            if ts_max <= t_anchor:
+                return self.view.window_delta(t_lo, t_hi, merged=True,
+                                              merged_lo=ts_max,
+                                              merged_hi=t_anchor)
             return self.view.window_delta(t_lo, t_hi)
         if not key.windowed:
             return self.delta
@@ -1164,6 +1207,9 @@ class HistoricalQueryEngine:
                 t_anchor, g_anchor = self.edge_anchor(key.anchor_id)
             else:
                 t_anchor, g_anchor = self.selector.get(key.anchor_id)
+            if key.kind == "evolve":
+                return self._run_evolve_group(key, b, mode, mesh, t_anchor,
+                                              g_anchor, tks, tls, vs_d)
             d = self._group_delta(
                 key, t_anchor,
                 np.concatenate([tks, tls]) if key.kind != "point" else tks)
@@ -1247,6 +1293,80 @@ class HistoricalQueryEngine:
             from repro.core import distributed as D
             return D.batch_sharded(mesh, kernel, statics, args, qmask)
         return kernel(*args, **dict(statics))
+
+    def _run_evolve_group(self, key: _GroupKey, b: int, mode, mesh,
+                          t_anchor: int, g_anchor, tks: np.ndarray,
+                          tls: np.ndarray, vs_d):
+        """Dispatch one sweep group as ONE device program
+        (``kernels.evolve_sweep.batch_evolve``): reconstruct each
+        query's start state from the shared anchor, then an incremental
+        apply-net / measure scan over the sweep window.
+
+        Two delta operands with different coverage contracts:
+
+        * ``d_rec`` (anchor ↔ every t_lo) feeds pure LWW
+          reconstructions, so the merged-delta tree may cover its
+          anchor-side common subrange;
+        * ``d_net`` (every sweep window) feeds the signed NET-count
+          scatter, which needs EVERY logged op — leaf segments only
+          (the LWW collapse would corrupt the counts).
+        """
+        from repro.kernels.evolve_sweep.ops import (SWEEP_MEASURES,
+                                                    batch_evolve)
+        if key.measure not in SWEEP_MEASURES:
+            raise ValueError(
+                f"measure {key.measure!r} has no incremental sweep; "
+                "store.evolve falls back to point queries for it")
+        stride = max(int(key.stride), 1)
+        widths = ((tls - tks) // stride + 1).astype(np.int32)
+        nb = _pow2(int(widths.max()))
+        ts_last = tks + (widths - 1) * stride
+        lo_all, hi_all = int(tks.min()), int(tks.max())
+        if self.view is not None:
+            w_lo = min(lo_all, t_anchor)
+            w_hi = max(hi_all, t_anchor)
+            if lo_all >= t_anchor:
+                d_rec = self.view.window_delta(w_lo, w_hi, merged=True,
+                                               merged_lo=t_anchor,
+                                               merged_hi=lo_all)
+            elif hi_all <= t_anchor:
+                d_rec = self.view.window_delta(w_lo, w_hi, merged=True,
+                                               merged_lo=hi_all,
+                                               merged_hi=t_anchor)
+            else:
+                d_rec = self.view.window_delta(w_lo, w_hi)
+            d_net = self.view.window_delta(lo_all, int(ts_last.max()))
+        else:
+            d_rec = d_net = self.delta
+        tlos_d = jnp.asarray(tks)
+        widths_d = jnp.asarray(widths)
+        if mode == "slots":
+            from repro.core import distributed as D
+            anchor_slots = self._slot_sharded_anchor(mesh, key.anchor_id)
+            d_rec = self._maybe_replicated_delta(mesh, d_rec)
+            d_net = self._maybe_replicated_delta(mesh, d_net)
+            return D.evolve_slots(mesh, anchor_slots, d_rec, d_net,
+                                  t_anchor, tlos_d, widths_d, vs_d,
+                                  measure=key.measure, scope=key.scope,
+                                  stride=stride, num_buckets=nb)
+        if mode == "batch":
+            if key.layout == "edge":
+                role = ("current_edge" if key.anchor_id == -1
+                        else ("edge_anchor", key.anchor_id))
+            else:
+                role = ("current" if key.anchor_id == -1
+                        else ("anchor", key.anchor_id))
+            g_anchor = self._replicated(mesh, role, g_anchor)
+            d_rec = self._maybe_replicated_delta(mesh, d_rec)
+            d_net = self._maybe_replicated_delta(mesh, d_net)
+        statics = (("measure", key.measure), ("scope", key.scope),
+                   ("stride", stride), ("num_buckets", nb))
+        args = (g_anchor, d_rec, d_net, t_anchor, tlos_d, widths_d, vs_d)
+        if mode == "batch":
+            from repro.core import distributed as D
+            return D.batch_sharded(mesh, batch_evolve, statics, args,
+                                   (0, 0, 0, 0, 1, 1, 1))
+        return batch_evolve(*args, **dict(statics))
 
     def _run_point_group_cached(self, key: _GroupKey, b: int,
                                 tks: np.ndarray, vs: np.ndarray):
@@ -1337,7 +1457,15 @@ class HistoricalQueryEngine:
         for (idxs, _), host in zip(outs, fetched):
             arr = np.asarray(host)
             for j, i in enumerate(idxs):
-                results[i] = arr[j]
+                q = queries[i]
+                if q.kind == "evolve":
+                    # sweep rows past a query's own width repeat its
+                    # last sample (group padding) — slice them off
+                    t_l = q.t_k if q.t_l is None else q.t_l
+                    bq = (int(t_l) - q.t_k) // max(int(q.stride), 1) + 1
+                    results[i] = arr[j][:bq]
+                else:
+                    results[i] = arr[j]
         if return_choices:
             return results, choices
         return results

@@ -38,13 +38,14 @@ Aggregate = Literal["mean", "min", "max"]
 class Query:
     """A historical query (paper Table 1)."""
 
-    kind: Literal["point", "diff", "agg"]
+    kind: Literal["point", "diff", "agg", "evolve"]
     scope: Literal["node", "global"]
     measure: str                  # key into NODE_MEASURES / GLOBAL_MEASURES
     t_k: int                      # point time, or range start
-    t_l: int | None = None        # range end (diff/agg)
+    t_l: int | None = None        # range end (diff/agg/evolve)
     v: int | None = None          # node (node-centric)
     agg: Aggregate = "mean"
+    stride: int = 1               # evolve: sample every ``stride`` units
 
 
 def _measure(g, q: Query):
@@ -219,6 +220,10 @@ APPLICABLE = {
     ("diff", "global"): ("two_phase",),
     ("agg", "node"): ("two_phase", "hybrid"),
     ("agg", "global"): ("two_phase",),
+    # evolve executes on its own incremental sweep kernel; the planner
+    # only chooses the anchor, so two_phase is the (sole) cost model.
+    ("evolve", "node"): ("two_phase",),
+    ("evolve", "global"): ("two_phase",),
 }
 
 

@@ -31,6 +31,26 @@ An epoch swap then seals + converts ONLY the open tail segment — swap
 cost drops from O(total history) to O(ops since the last swap) — while
 successive frozen epochs share the sealed segments' device arrays by
 reference.
+
+* ``MergedNode`` / ``build_merged_nodes`` — the hierarchical
+  merged-delta tree (DeltaGraph's eventlist hierarchy): interior nodes
+  at pow2 leaf spans, each holding an LWW-collapsed merge of its
+  children's ops.  Collapse keeps, per key — the canonical edge slot
+  for edge ops, the node id for node ops — only the FIRST and LAST op
+  inside the node's span, in original log order: for any query window
+  that fully covers the span, forward reconstruction is decided by the
+  key's last in-window op and backward reconstruction by its first
+  (``reconstruct._lww_decide``), and both survive the collapse exactly;
+  every dropped interior op is superseded in both directions.  A window
+  that only *partially* covers a node must not use it (a dropped
+  interior op could be the window's first/last for its key), so
+  ``window_delta(..., merged=True)`` substitutes tree nodes only inside
+  the caller-declared fully-covered subrange and keeps boundary leaves
+  as leaves — O(log S) tree nodes instead of O(S) leaf segments, and
+  strictly fewer ops wherever history churns (≥ 3 ops on one key).
+  Merged nodes are NOT valid for the sign-sum kernels (hybrid /
+  delta-only net counting) — dropping a superseded ADD/REM pair changes
+  a net — which is why the merged path is opt-in per call site.
 """
 from __future__ import annotations
 
@@ -169,6 +189,96 @@ class Segment:
                 f"resident={self.is_resident})")
 
 
+def _lww_keep(op: np.ndarray, slot: np.ndarray) -> np.ndarray:
+    """Sorted indices of the ops an LWW collapse keeps: the FIRST and
+    LAST op per key.  The key is the canonical edge slot for edge ops
+    and the node id for node ops (the store writes ``slot = u`` for
+    node ops, so ``slot`` keys both, disambiguated by the op family) —
+    exactly the cell each op lands on in either layout's LWW scatter."""
+    is_edge = ((op == ADD_EDGE) | (op == REM_EDGE)).astype(np.int64)
+    key = slot.astype(np.int64) * 2 + is_edge
+    _, first = np.unique(key, return_index=True)
+    _, last = np.unique(key[::-1], return_index=True)
+    last = key.shape[0] - 1 - last
+    return np.union1d(first, last)
+
+
+class MergedNode(Segment):
+    """One interior node of the merged-delta tree: the LWW-collapsed
+    merge of an aligned pow2 run of sealed leaf segments.
+
+    Covers leaves ``[lo, lo + 2**level)`` of the sealed sequence.  Ops
+    keep their original relative order, so for windows fully covering
+    the node's time span the materialized delta reconstructs
+    bit-identically to the leaf concatenation (the collapse only drops
+    ops superseded in BOTH reconstruction directions).  Inherits the
+    leaf's residency machinery — lazy device build, ``spill()``,
+    ``device_bytes`` — so the ``segment_device_budget`` pass treats
+    tree nodes exactly like cold leaves.
+    """
+
+    __slots__ = ("lo", "level", "span")
+
+    def __init__(self, op, u, v, slot, t, *, lo: int, level: int):
+        super().__init__(op, u, v, slot, t, sealed=True)
+        self.lo = int(lo)
+        self.level = int(level)
+        self.span = 1 << self.level
+
+    @classmethod
+    def merge(cls, a: Segment, b: Segment, *, lo: int,
+              level: int) -> "MergedNode":
+        """Collapse the concatenation of two children (leaves or
+        lower-level nodes).  First/last-per-key collapse is
+        associative — a child's kept first/last ops contain the
+        concatenation's — so building from already-collapsed children
+        equals collapsing the raw leaf run, at O(child ops) cost
+        (each op takes part in ≤ log S merges over its lifetime)."""
+        cols = {f: np.concatenate([getattr(a, f), getattr(b, f)])
+                for f in ("op", "u", "v", "slot", "t")}
+        keep = _lww_keep(cols["op"], cols["slot"])
+        return cls(cols["op"][keep], cols["u"][keep], cols["v"][keep],
+                   cols["slot"][keep], cols["t"][keep], lo=lo, level=level)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"MergedNode(uid={self.uid}, leaves=[{self.lo}, "
+                f"{self.lo + self.span}), ops={self.n_ops}, "
+                f"t=({self.t_min}..{self.t_max}), "
+                f"resident={self.is_resident})")
+
+
+def build_merged_nodes(segments, merged: dict) -> list[tuple[int, int]]:
+    """Complete the merged-delta tree over a sealed segment sequence.
+
+    ``merged`` maps ``(lo, level)`` → ``MergedNode`` covering leaves
+    ``[lo, lo + 2**level)``; this fills in every aligned block the
+    (append-only) sequence has completed, bottom-up so each node merges
+    two already-collapsed children.  Called at ``seal_tail`` — the
+    sequence only grows, so each call builds at most O(log S) new
+    nodes and total build work is O(ops · log S) amortized over the
+    store's lifetime.  Returns the (lo, level) pairs built."""
+    n = len(segments)
+    built: list[tuple[int, int]] = []
+    level = 1
+    while (1 << level) <= n:
+        span = 1 << level
+        for lo in range(0, n - span + 1, span):
+            if (lo, level) in merged:
+                continue
+            if level == 1:
+                a, b = segments[lo], segments[lo + 1]
+            else:
+                a = merged.get((lo, level - 1))
+                b = merged.get((lo + span // 2, level - 1))
+                if a is None or b is None:  # pragma: no cover
+                    continue
+            merged[(lo, level)] = MergedNode.merge(a, b, lo=lo,
+                                                   level=level)
+            built.append((lo, level))
+        level += 1
+    return built
+
+
 class SegmentedDeltaView:
     """Δ[t0, tcur] as an ordered sequence of time-disjoint segments.
 
@@ -185,8 +295,13 @@ class SegmentedDeltaView:
     """
 
     def __init__(self, segments, *, n_cap: int = 0, cap_min: int = 0,
-                 window_cache_cap: int = 8):
+                 window_cache_cap: int = 8, merged: dict | None = None):
         self.segments: tuple[Segment, ...] = tuple(segments)
+        # merged-delta tree nodes, keyed (leaf index, level) — leaf
+        # indices refer to positions in ``segments``.  Snapshotted at
+        # construction (the store's dict keeps growing with later
+        # seals; a frozen epoch's view must not see them appear).
+        self.merged: dict[tuple[int, int], MergedNode] = dict(merged or {})
         self.n_cap = int(n_cap)
         self.cap_min = int(cap_min)
         self._cache: "OrderedDict" = OrderedDict()
@@ -259,6 +374,59 @@ class SegmentedDeltaView:
 
     # ----------------------------------------------------------- execution
 
+    def _tree_cover(self, i0: int, i1: int, safe_lo, safe_hi):
+        """Cover the leaf run [i0, i1) with the largest merged nodes
+        whose time span lies fully inside (safe_lo, safe_hi]; leaves
+        elsewhere.  Greedy left-to-right over aligned pow2 blocks —
+        the canonical segment-tree decomposition, O(log S) items for a
+        fully-safe run."""
+        out: list[Segment] = []
+        i = i0
+        while i < i1:
+            best: MergedNode | None = None
+            level = 1
+            while True:
+                span = 1 << level
+                if i % span or i + span > i1:
+                    break
+                node = self.merged.get((i, level))
+                # a node's t_min is its first leaf's (shared by every
+                # level at this position) and t_max grows with level,
+                # so the first span/time violation is final
+                if node is None or not (safe_lo < node.t_min
+                                        and node.t_max <= safe_hi):
+                    break
+                best = node
+                level += 1
+            if best is not None:
+                out.append(best)
+                i += best.span
+            else:
+                out.append(self.segments[i])
+                i += 1
+        return tuple(out)
+
+    def window_cover(self, t_lo, t_hi=None, *, merged: bool = False,
+                     merged_lo=None, merged_hi=None):
+        """The segment/node selection ``window_delta`` materializes for
+        (t_lo, t_hi] — exposed so benches/tests can count the ops a
+        covering actually scatters.  ``merged=True`` substitutes tree
+        nodes for leaf runs whose time span is fully inside
+        (``merged_lo``, ``merged_hi``] (defaulting to the window
+        itself); see the module docstring for why partial coverage
+        must keep leaves."""
+        i0, i1 = self.window_range(t_lo, t_hi)
+        if not merged or not self.merged or i1 - i0 < 2:
+            return self.segments[i0:i1]
+        s_lo = t_lo if merged_lo is None else merged_lo
+        if merged_hi is not None:
+            s_hi = merged_hi
+        elif t_hi is not None:
+            s_hi = t_hi
+        else:
+            s_hi = self._tmax[-1] if len(self.segments) else t_lo
+        return self._tree_cover(i0, i1, int(s_lo), int(s_hi))
+
     def _materialize(self, sel: tuple[Segment, ...], cap: int) -> Delta:
         n = sum(s.n_ops for s in sel)
         if not sel:
@@ -283,7 +451,12 @@ class SegmentedDeltaView:
         # segments every request reads (and purge their hot window)
         for s in sel:
             s._touch = next(_CLOCK)
-        key = ((sel[0].uid, sel[-1].uid, len(sel), cap) if sel
+        # (min uid, max uid) brackets every selected item — merged
+        # nodes carry later uids than their leaves, so the bracket is
+        # what _purge_windows_of tests; the full uid tuple keeps
+        # distinct coverings of the same range distinct
+        key = ((min(s.uid for s in sel), max(s.uid for s in sel),
+                tuple(s.uid for s in sel), cap) if sel
                else ("empty", cap))
         with self._lock:
             d = self._cache.get(key)
@@ -297,15 +470,26 @@ class SegmentedDeltaView:
                 self._cache.popitem(last=False)
         return d
 
-    def window_delta(self, t_lo, t_hi=None, *, pad_min: int = 64) -> Delta:
+    def window_delta(self, t_lo, t_hi=None, *, pad_min: int = 64,
+                     merged: bool = False, merged_lo=None,
+                     merged_hi=None) -> Delta:
         """ONE compact device Delta holding every op with t in
         (t_lo, t_hi] — possibly more (whole overlapping segments are
         taken), never fewer.  Kernels mask by time window, and relative
         op order is preserved, so reconstruction/measure results are
         bit-identical to running against the monolithic log.  pow2
-        capacity (floor ``pad_min``) bounds recompiles."""
-        i0, i1 = self.window_range(t_lo, t_hi)
-        sel = self.segments[i0:i1]
+        capacity (floor ``pad_min``) bounds recompiles.
+
+        ``merged=True`` opts in to the merged-delta tree: leaf runs
+        whose time span lies fully inside (``merged_lo``,
+        ``merged_hi``] — defaulting to the window itself — are served
+        by O(log S) collapsed interior nodes instead of O(S) leaves.
+        ONLY safe for LWW reconstruction consumers whose time masks
+        fully cover that subrange (the collapse drops interior ops, so
+        sign-sum consumers and partially-covering masks must stay on
+        the leaf path)."""
+        sel = self.window_cover(t_lo, t_hi, merged=merged,
+                                merged_lo=merged_lo, merged_hi=merged_hi)
         cap = _pow2(sum(s.n_ops for s in sel), pad_min)
         return self._cached(sel, cap)
 
@@ -330,15 +514,18 @@ class SegmentedDeltaView:
     # ----------------------------------------------------------- residency
 
     def device_bytes(self) -> int:
-        return sum(s.device_bytes() for s in self.segments
+        return sum(s.device_bytes()
+                   for s in (*self.segments, *self.merged.values())
                    if s.is_resident)
 
     def _purge_windows_of(self, uids: set) -> None:
         """Drop cached window materializations that contain any of the
-        given segments — a spill must release EVERY device reference
-        to the segment's arrays, or the residency budget is fiction
-        (uids are assigned in log order, so a key's (first, last) uid
-        pair brackets exactly the segments its window concatenated)."""
+        given segments/nodes — a spill must release EVERY device
+        reference to the spilled arrays, or the residency budget is
+        fiction.  A key's (min, max) uid pair brackets everything its
+        window concatenated; purging on the bracket is conservative
+        (a tree-covered window may be dropped for a leaf it serves
+        through a merged node) but never leaks a reference."""
         with self._lock:
             for key in list(self._cache):
                 if key[0] == "empty":
@@ -363,8 +550,12 @@ class SegmentedDeltaView:
             s.delta  # noqa: B018 — property access builds the device log
         if budget is not None:
             keep = set(s.uid for s in self.segments[-hot:])
+            # merged tree nodes are residency citizens like cold
+            # leaves: they build device arrays lazily on first cover
+            # use, count against the budget, and spill by LRU touch
             resident = sorted(
-                (s for s in self.segments if s.is_resident),
+                (s for s in (*self.segments, *self.merged.values())
+                 if s.is_resident),
                 key=lambda s: s._touch)
             total = sum(s.device_bytes() for s in resident)
             spilled = set()

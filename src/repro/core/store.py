@@ -31,7 +31,8 @@ from repro.core.index import NodeIndex, build_node_index_host
 from repro.core.materialize import (MaterializationPolicy, MaterializedStore)
 from repro.core.plans import Query, evaluate
 from repro.core.reconstruct import reconstruct_dense, reconstruct_edge
-from repro.core.segments import Segment, SegmentedDeltaView
+from repro.core.segments import (Segment, SegmentedDeltaView,
+                                 build_merged_nodes)
 
 
 @dataclasses.dataclass
@@ -89,6 +90,10 @@ class TemporalGraphStore:
         self.segment_min_ops = int(segment_min_ops)
         self.segment_device_budget = segment_device_budget
         self._segments: list[Segment] = []
+        # merged-delta tree over the sealed segments, keyed
+        # (leaf index, level) — grown at each seal_tail, handed to
+        # every delta_view (core.segments.build_merged_nodes)
+        self._merged: dict[tuple[int, int], object] = {}
         self._t_sealed = 0            # time cut of the sealed prefix
         self._op_l: list[int] = []
         self._u_l: list[int] = []
@@ -381,6 +386,10 @@ class TemporalGraphStore:
         self._slot_l = self._slot_l[k:]
         self._t_l = self._t_l[k:]
         self._t_sealed = t_seal
+        # grow the merged-delta tree over the now-longer sealed
+        # sequence: at most O(log S) new interior nodes per seal,
+        # amortized O(ops · log S) total (LSM-style)
+        build_merged_nodes(self._segments, self._merged)
         # log content is unchanged — only the host partitioning moved,
         # so the (content-addressed) delta/index/engine caches survive
         self._tail_cache = None
@@ -407,7 +416,8 @@ class TemporalGraphStore:
                                     tail["slot"], tail["t"],
                                     sealed=False))
             self._view_cache = SegmentedDeltaView(
-                segs, n_cap=self.n_cap, cap_min=self.delta_cap_min)
+                segs, n_cap=self.n_cap, cap_min=self.delta_cap_min,
+                merged=self._merged)
         return self._view_cache
 
     # ---------------------------------------------------------------- views
@@ -542,8 +552,11 @@ class TemporalGraphStore:
                                                     layout=self.layout)
         if self.segmented:
             # segment selection IS the window slice: materialize only
-            # the segments overlapping (anchor, t)
-            delta = delta.window_delta(min(t, t_a), max(t, t_a))
+            # the segments overlapping (anchor, t).  The single LWW
+            # reconstruction masks exactly at the window bounds, so
+            # fully-covered leaf runs may come from the merged tree.
+            delta = delta.window_delta(min(t, t_a), max(t, t_a),
+                                       merged=True)
         else:
             from repro.core.index import count_window_ops, gather_window
             n_win = int(count_window_ops(delta, min(t, t_a), max(t, t_a)))
@@ -675,6 +688,31 @@ class TemporalGraphStore:
         return self.engine(indexed=indexed, mesh=mesh).evaluate_many(
             queries, plan, indexed=True if indexed else None,
             layout=layout, **kw)
+
+    def evolve(self, measure: str, t_lo: int, t_hi: int, *,
+               stride: int = 1, v: int | None = None,
+               scope: str | None = None, mesh=None, **kw) -> np.ndarray:
+        """Time-sweep query: ``measure`` at every sample time
+        ``t_lo, t_lo + stride, ..., ≤ t_hi`` as ONE device program —
+        reconstruct at ``t_lo`` once, then an incremental
+        apply-bucket / measure ``lax.scan`` (``kernels.evolve_sweep``).
+        Bit-identical to the corresponding independent point queries
+        (tests/test_evolve.py) at a fraction of the cost: the shared
+        anchor→t_lo window is applied once instead of once per sample.
+
+        Measures outside the incremental set
+        (``kernels.evolve_sweep.SWEEP_MEASURES``) fall back
+        transparently to independent point queries — same results,
+        none of the speedup."""
+        from repro.kernels.evolve_sweep import SWEEP_MEASURES
+        scope = scope or ("node" if v is not None else "global")
+        if measure in SWEEP_MEASURES:
+            q = Query("evolve", scope, measure, t_k=int(t_lo),
+                      t_l=int(t_hi), v=v, stride=int(stride))
+            return self.evaluate_many([q], mesh=mesh, **kw)[0]
+        ts = range(int(t_lo), int(t_hi) + 1, int(stride))
+        qs = [Query("point", scope, measure, t_k=t, v=v) for t in ts]
+        return np.asarray(self.evaluate_many(qs, mesh=mesh, **kw))
 
     # stats used by benchmarks (paper Table 3)
     def stats(self) -> dict:

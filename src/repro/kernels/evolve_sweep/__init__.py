@@ -1,0 +1,11 @@
+from repro.kernels.evolve_sweep.ops import (SWEEP_MEASURES, batch_evolve,
+                                            measure_from_state, sweep_nets,
+                                            sweep_scan)
+from repro.kernels.evolve_sweep.ref import evolve_ref
+from repro.kernels.evolve_sweep.sweep import (bucket_sweep_events,
+                                              sweep_degree_series,
+                                              sweep_series_tiles)
+
+__all__ = ["SWEEP_MEASURES", "batch_evolve", "sweep_nets", "sweep_scan",
+           "measure_from_state", "evolve_ref", "bucket_sweep_events",
+           "sweep_degree_series", "sweep_series_tiles"]

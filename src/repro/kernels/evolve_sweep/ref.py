@@ -1,0 +1,35 @@
+"""Reference sweep: B independent point reconstructions + measures.
+
+This is the semantics ``batch_evolve`` must bit-match — exactly what a
+client pays today by issuing B point queries.  Used by the parity
+tests and by ``benchmarks/bench_sweep.py`` as the baseline side of the
+speedup measurement.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.delta import Delta
+from repro.core.graph import EdgeGraph
+from repro.core.queries import (EDGE_GLOBAL_MEASURES, EDGE_NODE_MEASURES,
+                                GLOBAL_MEASURES, NODE_MEASURES)
+from repro.core.reconstruct import reconstruct_dense, reconstruct_edge
+
+
+def evolve_ref(anchor, delta: Delta, t_anchor, t_lo, t_hi, stride: int,
+               measure: str, scope: str, v=None):
+    """One reconstruction per sample — the O(B · window) baseline."""
+    edge_layout = isinstance(anchor, EdgeGraph)
+    if edge_layout:
+        table = EDGE_NODE_MEASURES if scope == "node" else EDGE_GLOBAL_MEASURES
+    else:
+        table = NODE_MEASURES if scope == "node" else GLOBAL_MEASURES
+    fn = table[measure]
+    outs = []
+    for t in range(int(t_lo), int(t_hi) + 1, int(stride)):
+        if edge_layout:
+            g = reconstruct_edge(anchor, delta, t_anchor, t)
+        else:
+            g = reconstruct_dense(anchor, delta, t_anchor, t)
+        outs.append(fn(g, v) if scope == "node" else fn(g))
+    return jnp.stack(outs)

@@ -49,7 +49,9 @@ def query_cache_key(q: Query, layout: str | None) -> tuple:
     cache entries interpretable per serving configuration."""
     return (q.kind, q.scope, q.measure, q.agg if q.kind == "agg" else "",
             int(q.t_k), None if q.t_l is None else int(q.t_l),
-            None if q.v is None else int(q.v), layout or "auto")
+            None if q.v is None else int(q.v),
+            int(getattr(q, "stride", 1)) if q.kind == "evolve" else 1,
+            layout or "auto")
 
 
 @dataclasses.dataclass
@@ -130,6 +132,21 @@ class MicroBatchFrontend:
         if full and self._thread is None:
             self._drain_one_batch()
         return fut
+
+    def submit_sweep(self, measure: str, t_lo: int, t_hi: int, *,
+                     stride: int = 1, v: int | None = None,
+                     scope: str | None = None) -> Future:
+        """Enqueue one time-sweep (``evolve``) request.
+
+        Sweeps ride the same coalescing path as point queries: same
+        deadline/batch-size drain, duplicate sweeps within a batch
+        collapse to one evaluation, repeated sweeps within an epoch hit
+        the exact-result cache (the full sample array is the cached
+        value).  The engine groups co-batched sweeps sharing (measure,
+        stride, anchor) into ONE device program."""
+        scope = scope or ("node" if v is not None else "global")
+        return self.submit(Query("evolve", scope, measure, t_k=int(t_lo),
+                                 t_l=int(t_hi), v=v, stride=int(stride)))
 
     def serve(self, queries: Sequence[Query]) -> list:
         """Synchronous convenience: submit everything, flush, gather."""

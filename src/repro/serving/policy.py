@@ -57,17 +57,28 @@ class WorkloadStats:
         self.queries_recorded = 0
         self._lock = threading.Lock()
 
-    def record(self, times) -> None:
+    def record(self, times, weight: float = 1.0) -> None:
         with self._lock:
             for t in times:
                 t = int(t)
-                self._w[t] = self._w.get(t, 0.0) + 1.0
-                self.total += 1.0
+                self._w[t] = self._w.get(t, 0.0) + weight
+                self.total += weight
 
     def record_queries(self, queries) -> None:
-        """Engine hook: record t_k (and t_l for range queries)."""
+        """Engine hook: record t_k (and t_l for range queries).
+
+        Sweep (``evolve``) queries record EVERY swept sample time, each
+        at weight 1/B — one dashboard sweep carries one query's total
+        mass, spread over its window, so sweep-heavy workloads pull
+        anchors toward the swept region without a single wide sweep
+        drowning out the point traffic."""
         ts = []
         for q in queries:
+            if getattr(q, "kind", "") == "evolve" and q.t_l is not None:
+                stride = max(int(getattr(q, "stride", 1)), 1)
+                swept = range(int(q.t_k), int(q.t_l) + 1, stride)
+                self.record(swept, weight=1.0 / max(len(swept), 1))
+                continue
             ts.append(q.t_k)
             if q.t_l is not None:
                 ts.append(q.t_l)

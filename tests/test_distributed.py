@@ -205,6 +205,43 @@ print("slot-sharded parity OK")
     assert "slot-sharded parity OK" in _run(code)
 
 
+def test_sharded_evolve_sweep_bit_parity():
+    """Evolve (time-sweep) groups on 8 devices: the slot-sharded sweep
+    (integer-partial psum of the start state) and the batch-sharded
+    dense sweep must both bit-match the single-device sweep, which in
+    turn must bit-match B independent point queries."""
+    code = _PARITY_PRELUDE + """
+qs = [
+    Query("evolve", "node", "degree", t_k=2, t_l=tc, v=5, stride=1),
+    Query("evolve", "global", "num_edges", t_k=2, t_l=tc, stride=1),
+    Query("evolve", "global", "density", t_k=3, t_l=tc - 1, stride=2),
+    Query("evolve", "global", "avg_degree", t_k=2, t_l=tc, stride=1),
+    Query("evolve", "global", "degree_distribution", t_k=2, t_l=tc,
+          stride=3),
+] * 2
+ref = eng.evaluate_many(qs, layout="edge", shard="never")
+for q, r in zip(qs[:5], ref[:5]):
+    ts = list(range(q.t_k, q.t_l + 1, q.stride))
+    pts = eng.evaluate_many(
+        [Query("point", q.scope, q.measure, t_k=t, v=q.v) for t in ts],
+        layout="edge", shard="never")
+    assert np.array_equal(np.asarray(r),
+                          np.stack([np.asarray(p) for p in pts])), q
+got = eng.evaluate_many(qs, layout="edge", mesh=mesh, shard="force")
+for q, a, b in zip(qs, got, ref):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), q
+assert {m for *_, m in eng.last_group_stats} == {"slots"}, \\
+    eng.last_group_stats
+gotd = eng.evaluate_many(qs, layout="dense", mesh=mesh, shard="force")
+for q, a, b in zip(qs, gotd, ref):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), q
+assert {m for *_, m in eng.last_group_stats} == {"batch"}, \\
+    eng.last_group_stats
+print("sweep sharded parity OK")
+"""
+    assert "sweep sharded parity OK" in _run(code)
+
+
 def test_live_serving_sharded_bit_parity():
     """Serving acceptance (PR 4): with ingest interleaved, every query
     at t ≤ t_served on a mesh-bound LiveGraphStore (sharded groups
