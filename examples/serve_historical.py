@@ -11,6 +11,11 @@ snapshot over all available devices, then serves:
   3. a degree *time-series* for every node at once (the hybrid
      aggregate plan vectorized over the whole graph).
 
+This example deliberately drives the internal layers the facade wraps;
+application code should use ``repro.api.GraphSession`` instead (see
+``examples/quickstart.py``), which adds live ingest, watermark
+semantics, result caching, and durability over the same engine.
+
   PYTHONPATH=src python examples/serve_historical.py [--nodes 2000]
 """
 import argparse

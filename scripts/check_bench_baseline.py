@@ -43,6 +43,12 @@ BENCHES = {
     "sweep": ("benchmarks/bench_sweep.py",
               "benchmarks/BENCH_sweep.json",
               ("smoke", "sweeps_per_sec")),
+    # WAL-on ingest drain throughput — a regression to per-op fsyncs,
+    # per-swap segment rewrites, or checkpoint work that scales with
+    # history (instead of with the epoch) tanks this number first
+    "persistence": ("benchmarks/bench_persistence.py",
+                    "benchmarks/BENCH_persistence.json",
+                    ("smoke", "wal_drain_ops_per_sec")),
 }
 
 

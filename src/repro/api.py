@@ -1,0 +1,222 @@
+"""``GraphSession`` — the one front door to the temporal graph system.
+
+The repo grew six query entry points (``store.snapshot_at``,
+``plans.evaluate``, ``MaterializedStore.select``,
+``engine.evaluate_many``, ``store.evolve``, ``frontend.submit`` /
+``submit_sweep``) plus three layers of construction (store -> live
+store -> frontend).  ``GraphSession`` collapses all of it behind one
+object with one lifecycle::
+
+    from repro.api import GraphSession
+
+    with GraphSession.open("/data/graph", n_cap=1024) as s:
+        s.ingest([(ADD_NODE, 0, 0, 1), (ADD_NODE, 1, 1, 1),
+                  (ADD_EDGE, 0, 1, 2)])
+        s.query("degree", t=2, v=0)            # -> 1
+        s.query_many([Query("point", "global", "num_edges", t_k=2)])
+        s.sweep("avg_degree", t_lo=1, t_hi=2)  # evolve series
+        s.snapshot_at(2)                       # DenseGraph/EdgeGraph
+        s.flush()                              # durable checkpoint
+    # kill -9 anywhere above: reopen() recovers bit-exactly
+
+* ``path=...`` makes the session durable (``repro.persist``): every
+  acknowledged ``ingest`` is WAL'd first, every swap checkpoints the
+  sealed segments + anchor manifest before the watermark moves, and
+  ``open`` on an existing path crash-recovers (including the pending
+  ops that never made it into an epoch).  ``path=None`` is the same
+  system fully process-resident.
+* Queries route through the micro-batching frontend (exact result
+  cache, duplicate coalescing) over the live store's watermark
+  semantics.  The default ``stale="block"`` swaps synchronously when a
+  query needs times newer than the frozen epoch — single-writer
+  sessions thus always see their own writes; pass ``stale="raise"`` /
+  ``"serve"`` for strict serving behavior.
+* Construction is validated ``Query`` objects everywhere; malformed
+  requests raise ``ValueError`` at build time, watermark violations
+  raise ``WatermarkError`` (also a ``ValueError``) at evaluation.
+
+The old entry points remain as thin shims over the same engine and are
+fine for incremental adoption; new code should start here.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.plans import Query
+from repro.core.store import Op, TemporalGraphStore
+from repro.serving.frontend import MicroBatchFrontend
+from repro.serving.ingest import LiveGraphStore, SwapRecord, WatermarkError
+
+__all__ = ["GraphSession", "Query", "Op", "WatermarkError"]
+
+
+class GraphSession:
+    """One handle over store + live serving + frontend (+ durability).
+
+    Keyword groups (everything has a sane default except ``n_cap`` on
+    first open): **identity** ``path`` (durable root; None = in
+    memory), ``n_cap``/``e_cap``/``layout`` (graph shape; recovered
+    from the manifest when reopening); **serving** ``policy``
+    (materialization), ``mesh`` (multi-device), ``stale`` (watermark
+    behavior, default ``"block"``), ``max_batch``/``max_delay_ms``/
+    ``cache_entries`` (frontend coalescing + exact cache);
+    **durability** ``fsync`` (per-record WAL sync, default True).
+    Remaining keywords pass through to ``LiveGraphStore``.
+    """
+
+    def __init__(self, *, path: str | None = None, n_cap: int | None = None,
+                 e_cap: int | None = None, layout: str | None = None,
+                 policy=None, mesh=None, stale: str = "block",
+                 max_batch: int = 64, max_delay_ms: float = 0.0,
+                 cache_entries: int = 4096, fsync: bool = True,
+                 segment_min_ops: int | None = None,
+                 segment_device_budget: int | None = None, **live_kw):
+        self.path = path
+        pending: list[Op] = []
+        if path is not None:
+            from repro.persist import open_store
+            # NB: `policy` here is the SERVING rebalance policy (goes to
+            # LiveGraphStore below); open_store's policy kwarg is the
+            # core MaterializationPolicy and stays unset.
+            rec = open_store(path, n_cap=n_cap, e_cap=e_cap, layout=layout,
+                             fsync=fsync, segment_min_ops=segment_min_ops,
+                             segment_device_budget=segment_device_budget)
+            store, pending = rec.store, rec.pending
+        else:
+            if n_cap is None:
+                raise ValueError("an in-memory session needs n_cap")
+            store_kw = {}
+            if segment_min_ops is not None:
+                store_kw["segment_min_ops"] = segment_min_ops
+            store = TemporalGraphStore(
+                n_cap, e_cap=e_cap, layout=layout or "dense",
+                segment_device_budget=segment_device_budget, **store_kw)
+        self.live = LiveGraphStore(store=store, policy=policy, mesh=mesh,
+                                   pending=pending, **live_kw)
+        self.frontend = MicroBatchFrontend(
+            self.live, max_batch=max_batch, max_delay_ms=max_delay_ms,
+            cache_entries=cache_entries, stale=stale)
+        self._closed = False
+
+    # ----------------------------------------------------------- lifecycle
+
+    @classmethod
+    def open(cls, path: str | None = None, **kw) -> "GraphSession":
+        """Open a durable session at ``path`` (creating it with the
+        given config, or crash-recovering whatever is there), or an
+        in-memory one when ``path`` is None."""
+        return cls(path=path, **kw)
+
+    def flush(self) -> SwapRecord:
+        """Absorb every pending op into a new served epoch and (for a
+        durable session) checkpoint: on return, all acknowledged
+        ingest is queryable AND replay-free on the next open."""
+        return self.live.swap()
+
+    def close(self) -> None:
+        """Flush the frontend, checkpoint, release the WAL.  Safe to
+        call twice; the session is unusable for writes afterwards."""
+        if self._closed:
+            return
+        self.frontend.stop()             # no-op unless start()ed
+        self.live.close()
+        self._closed = True
+
+    def __enter__(self) -> "GraphSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # --------------------------------------------------------------- state
+
+    @property
+    def store(self) -> TemporalGraphStore:
+        return self.live.store
+
+    @property
+    def watermark(self) -> int:
+        """Exactness frontier: queries at t ≤ watermark bit-match a
+        from-scratch store (the serving contract)."""
+        return self.live.t_served
+
+    @property
+    def t_cur(self) -> int:
+        return self.live.store.t_cur
+
+    # --------------------------------------------------------------- write
+
+    def ingest(self, ops: Iterable[Op | tuple]) -> int:
+        """Append time-annotated ops (``Op`` or ``(op, u, v, t)``
+        tuples).  Durable sessions WAL the batch before acknowledging;
+        the ops become queryable at the next ``flush``/swap — or
+        transparently, since the default ``stale="block"`` swaps on
+        demand when a query asks for newer times."""
+        return self.live.append(ops)
+
+    # --------------------------------------------------------------- read
+
+    @staticmethod
+    def _as_query(q: Query | None, measure: str | None, kw: dict) -> Query:
+        if q is not None:
+            if measure is not None or kw:
+                raise ValueError("pass either a Query object or keyword "
+                                 "fields, not both")
+            return q
+        if "t" in kw:                    # ergonomic alias for point time
+            kw["t_k"] = kw.pop("t")
+        return Query(measure=measure or "", **kw)
+
+    def query(self, q: Query | str | None = None, /, **kw):
+        """One historical query; returns a scalar (or an array for
+        array-valued measures).  Accepts a ``Query`` or builds one:
+        ``query("degree", t=10, v=3)``, ``query("num_edges", kind="diff",
+        t_k=5, t_l=9)``.  Routed through the frontend — duplicate
+        requests within an epoch hit the exact result cache."""
+        if isinstance(q, str):
+            q, kw = None, {"measure": q, **kw}
+        query = self._as_query(q, kw.pop("measure", None), kw)
+        fut = self.frontend.submit(query)
+        self.frontend.flush()
+        return fut.result()
+
+    def query_many(self, queries: Sequence[Query]) -> list:
+        """Batched queries: submitted together, so the engine groups
+        them into the minimum number of device programs and duplicates
+        collapse to one evaluation."""
+        futs = [self.frontend.submit(q) for q in queries]
+        self.frontend.flush()
+        return [f.result() for f in futs]
+
+    def sweep(self, measure: str, t_lo: int, t_hi: int, *,
+              stride: int = 1, v: int | None = None,
+              scope: str | None = None) -> np.ndarray:
+        """Evolution series: ``measure`` at t_lo, t_lo+stride, ... ≤
+        t_hi as ONE device program (``evolve``), bit-matching the
+        equivalent point queries."""
+        fut = self.frontend.submit_sweep(measure, t_lo, t_hi,
+                                         stride=stride, v=v, scope=scope)
+        self.frontend.flush()
+        return np.asarray(fut.result())
+
+    def snapshot_at(self, t: int):
+        """The reconstructed graph SG_t (dense or edge layout per the
+        store).  Respects the session's ``stale`` mode for t past the
+        watermark: ``"block"`` swaps first, otherwise raises."""
+        if t > self.live.t_served:
+            if self.frontend.stale == "block":
+                self.live.swap()
+            if t > self.live.t_served:
+                raise WatermarkError(
+                    f"snapshot at t={t} is past the watermark "
+                    f"t_served={self.live.t_served}")
+        return self.store.snapshot_at(t)
+
+    def stats(self) -> dict:
+        """Store + serving counters (ingest lag, epoch, cache rates)."""
+        return {**self.store.stats(), **self.live.ingest_lag(),
+                "watermark": self.watermark,
+                "cache_hits": self.frontend.stats.cache_hits,
+                "cache_misses": self.frontend.stats.cache_misses}

@@ -62,12 +62,16 @@ from repro.core.segments import (SegmentedDeltaView,
                                  window_ops_count as _window_ops_host)
 
 
-class WatermarkError(RuntimeError):
+class WatermarkError(ValueError, RuntimeError):
     """A query's time lies beyond the engine's serving watermark
     ``t_served``: ops at that time may still sit in a pending ingest
     buffer, so the frozen state cannot answer it exactly.  Raised by
     watermarked engines (``repro.serving``); callers choose between
-    surfacing it and blocking on an epoch swap."""
+    surfacing it and blocking on an epoch swap.  Subclasses
+    ``ValueError`` (a t-past-watermark query is an invalid argument at
+    this instant, and the validated-``Query`` API contract promises
+    ``ValueError`` for every malformed request) and keeps the historic
+    ``RuntimeError`` base for existing handlers."""
 
 
 

@@ -59,6 +59,8 @@ class MaterializedStore:
         time-based selection; ``'ops'`` is operation-based (optimal #ops
         applied), priced with the temporal index.
 
+        Deprecated as an entry point (``repro.api.GraphSession`` — or
+        the engine — picks anchors for every query automatically).
         Thin wrapper kept for compatibility: candidate costing lives in
         the engine's ``AnchorSelector`` (which additionally lets SG_tcur
         compete when given a current snapshot).

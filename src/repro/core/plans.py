@@ -34,18 +34,74 @@ from repro.core.reconstruct import (node_degree_series, reconstruct_dense,
 Aggregate = Literal["mean", "min", "max"]
 
 
+_KINDS = ("point", "diff", "agg", "evolve")
+_RANGE_KINDS = ("diff", "agg", "evolve")
+_AGGS = ("mean", "min", "max")
+
+
 @dataclasses.dataclass(frozen=True)
 class Query:
-    """A historical query (paper Table 1)."""
+    """A historical query (paper Table 1).
 
-    kind: Literal["point", "diff", "agg", "evolve"]
-    scope: Literal["node", "global"]
-    measure: str                  # key into NODE_MEASURES / GLOBAL_MEASURES
-    t_k: int                      # point time, or range start
+    This dataclass is THE validated construction path for every query
+    in the system — the engine, the serving frontend, and the
+    ``GraphSession`` facade all consume it as-is, so a malformed query
+    fails here with a clear ``ValueError`` instead of deep inside a
+    jitted kernel.  ``scope`` may be omitted: it is inferred from ``v``
+    (node-centric iff a node is given).  Time-vs-watermark violations
+    are intentionally NOT checked here (a Query is store-independent);
+    they surface as ``WatermarkError`` — a ``ValueError`` subclass —
+    at evaluation time.
+    """
+
+    kind: Literal["point", "diff", "agg", "evolve"] = "point"
+    scope: Literal["node", "global"] | None = None
+    measure: str = ""             # key into NODE_MEASURES / GLOBAL_MEASURES
+    t_k: int = 0                  # point time, or range start
     t_l: int | None = None        # range end (diff/agg/evolve)
     v: int | None = None          # node (node-centric)
     agg: Aggregate = "mean"
     stride: int = 1               # evolve: sample every ``stride`` units
+
+    def __post_init__(self):
+        from repro.core.queries import edge_supported
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown query kind {self.kind!r} "
+                             f"(one of {_KINDS})")
+        if self.scope is None:
+            object.__setattr__(self, "scope",
+                               "node" if self.v is not None else "global")
+        if self.scope not in ("node", "global"):
+            raise ValueError(f"unknown scope {self.scope!r} "
+                             "(node | global)")
+        known = (NODE_MEASURES if self.scope == "node"
+                 else GLOBAL_MEASURES)
+        if self.measure not in known and not edge_supported(self.measure,
+                                                            self.scope):
+            raise ValueError(
+                f"unknown {self.scope}-scope measure {self.measure!r} "
+                f"(known: {', '.join(sorted(known))})")
+        if self.scope == "node" and self.v is None:
+            raise ValueError(f"node-scope query {self.measure!r} needs "
+                             "v=<node id>")
+        if self.kind in _RANGE_KINDS:
+            if self.t_l is None:
+                raise ValueError(f"{self.kind!r} query needs a time range"
+                                 " — pass t_l (range end) as well as t_k")
+            if self.t_l < self.t_k:
+                raise ValueError(f"empty time range: t_l={self.t_l} < "
+                                 f"t_k={self.t_k}")
+        if self.kind == "evolve":
+            if self.stride <= 0:
+                raise ValueError(f"evolve stride must be >= 1, got "
+                                 f"{self.stride}")
+        elif self.stride != 1:
+            raise ValueError(f"stride is an evolve parameter "
+                             f"({self.kind!r} query got stride="
+                             f"{self.stride})")
+        if self.kind == "agg" and self.agg not in _AGGS:
+            raise ValueError(f"unknown aggregate {self.agg!r} "
+                             f"(one of {_AGGS})")
 
 
 def _measure(g, q: Query):
@@ -240,7 +296,9 @@ def evaluate(current: DenseGraph, delta: Delta, t_cur, q: Query,
 
     Thin wrapper kept for compatibility: plan *choice* is delegated to
     the engine's cost-based ``Planner`` (``core.engine``); the kernels
-    below remain the single-query execution path.
+    below remain the single-query execution path.  Deprecated as an
+    entry point — new code should go through ``repro.api.GraphSession``
+    (or ``store.evaluate_many`` when holding a bare store).
     """
     plans = applicable_plans(q)
     if plan == "auto":

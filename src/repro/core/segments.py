@@ -116,6 +116,34 @@ class Segment:
         # spill victim — it is the newest, hottest data
         self._touch = next(_CLOCK)
 
+    # ----------------------------------------------------------- serialize
+
+    _COLS = ("op", "u", "v", "slot", "t")
+
+    def host_columns(self) -> dict[str, np.ndarray]:
+        """The compact host columns, for serialization
+        (``persist.manifest.save_segment_file`` writes them as one
+        (5, n) int32 block)."""
+        return {c: getattr(self, c) for c in self._COLS}
+
+    def save(self, path: str) -> int:
+        """Persist this segment atomically; returns the block crc32."""
+        from repro.persist.manifest import save_segment_file
+        return save_segment_file(path, self.host_columns())
+
+    @classmethod
+    def load(cls, path: str, *, mmap: bool = True) -> "Segment":
+        """Rehydrate a sealed segment from disk.  With ``mmap`` (the
+        default) the columns are mmap-backed views — construction reads
+        only the header and boundary pages, and the residency pass's
+        spill/reload cycle pages op data in and out on demand exactly
+        as it does for RAM-resident history (``np.ascontiguousarray``
+        adopts the contiguous int32 rows without copying)."""
+        from repro.persist.manifest import load_segment_file
+        cols = load_segment_file(path, mmap=mmap)
+        return cls(cols["op"], cols["u"], cols["v"], cols["slot"],
+                   cols["t"])
+
     # ------------------------------------------------------------- stats
 
     @property

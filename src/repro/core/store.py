@@ -138,6 +138,11 @@ class TemporalGraphStore:
         self._tail_cache: dict | None = None
         self._host_cache: dict | None = None
         self._view_cache: SegmentedDeltaView | None = None
+        # Durability hooks (repro.persist.StorePersistence): attached
+        # by persist.open_store — ingest/advance/seal then log to the
+        # WAL and sealed segments are checkpointed to disk.  None (the
+        # default) keeps the store fully process-resident.
+        self.persist = None
 
     # ---------------------------------------------------------------- ingest
 
@@ -265,7 +270,7 @@ class TemporalGraphStore:
         the same immutable-served-history contract ``LiveGraphStore``
         enforces at the swap boundary).  Returns #accepted.
         """
-        n_acc = 0
+        accepted: list[Op] = []
         try:
             for o in ops:
                 if not isinstance(o, Op):
@@ -291,23 +296,31 @@ class TemporalGraphStore:
                         if live and (a == o.u or b == o.u):
                             if self._apply_host(REM_EDGE, a, b):
                                 self._append(REM_EDGE, a, b, o.t)
-                                n_acc += 1
+                                accepted.append(Op(REM_EDGE, a, b, o.t))
                 if self._apply_host(o.op, o.u, o.v):
                     self._append(o.op, o.u, o.v, o.t)
-                    n_acc += 1
+                    accepted.append(o)
         finally:
             # invalidate even when a mid-batch op raises: the accepted
             # prefix is already in the log and host mirror, and stale
-            # caches would hide it from delta()/advance_to
-            if n_acc:
+            # caches would hide it from delta()/advance_to.  The WAL
+            # records exactly what was appended (expansions included),
+            # so replay re-accepts it verbatim — and a crash between
+            # the mutation and the log write only loses ops this call
+            # never acknowledged.
+            if accepted:
                 self._invalidate()
-        return n_acc
+                if self.persist is not None:
+                    self.persist.log_ops(accepted)
+        return len(accepted)
 
     def advance_to(self, t_next: int) -> None:
         """Close the current time unit (Algorithm 3 lines 7–9): apply the
         temporary delta to SG_tcur, append it to the interval delta (the
         host log already holds it), and maybe materialize."""
         assert t_next >= self.t_cur
+        if self.persist is not None:
+            self.persist.log_advance(t_next)
         # Ops of the units being closed: only those in (t_cur, t_next]
         # count toward the materialization budget — future-dated ops
         # (t > t_next) will be counted by the advance that closes their
@@ -390,6 +403,12 @@ class TemporalGraphStore:
         # sequence: at most O(log S) new interior nodes per seal,
         # amortized O(ops · log S) total (LSM-style)
         build_merged_nodes(self._segments, self._merged)
+        if self.persist is not None:
+            # sealed-segment write hook: the immutable segment's compact
+            # arrays go to disk once, and the cut is WAL-logged so a
+            # policy-less recovery reproduces the same segmentation
+            self.persist.on_seal(self, self._segments[-1],
+                                 len(self._segments) - 1, t_seal, k, force)
         # log content is unchanged — only the host partitioning moved,
         # so the (content-addressed) delta/index/engine caches survive
         self._tail_cache = None
@@ -520,7 +539,10 @@ class TemporalGraphStore:
                     selection: str = "ops",
                     windowed: bool = False) -> DenseGraph:
         """Reconstruct SG_t (anchored at the best materialized snapshot
-        if available, else at SG_tcur — Theorem 1).
+        if available, else at SG_tcur — Theorem 1).  For application
+        code prefer ``repro.api.GraphSession.snapshot_at``, which adds
+        the serving watermark semantics; this remains the store-level
+        primitive it routes to.
 
         ``windowed=True`` slices the delta to the anchor→t window
         through the temporal index first (capacity rounded to a power
@@ -660,8 +682,30 @@ class TemporalGraphStore:
             eng = self.place_on_mesh(mesh)   # keeps the index, adds mesh
         return eng
 
+    # ------------------------------------------------------------ durability
+
+    def flush(self) -> None:
+        """Checkpoint the durable state (no-op for a process-resident
+        store): rotate the WAL behind a fresh manifest so recovery
+        replays only what happened after this call.  The WAL itself is
+        fsync'd per record — flush bounds recovery *time*, it is not
+        needed for recovery *correctness*."""
+        if self.persist is not None:
+            self.persist.checkpoint(self)
+
+    def close(self) -> None:
+        """Flush and release the durability layer.  The store object
+        stays queryable (its state is in memory); further mutations
+        would no longer be logged, so treat it as read-only after."""
+        if self.persist is not None:
+            self.persist.checkpoint(self)
+            self.persist.close()
+
     def query(self, q: Query, plan: str = "auto", indexed: bool = False,
               **kw):
+        """Single-query compat shim (prefer ``repro.api.GraphSession``
+        — one facade over store/engine/frontend — or ``evaluate_many``
+        for anything batched)."""
         index = self.node_index() if indexed else None
         if plan == "auto":
             # the cached engine carries the host timestamp copy, so
@@ -684,7 +728,10 @@ class TemporalGraphStore:
         grouped executor (one device program per (plan, anchor, layout)
         group; one *sharded* program per big group when ``mesh`` spans
         more than one device).  ``layout`` forces dense/edge execution
-        ("auto"/None lets the planner's N²-vs-E cost term decide)."""
+        ("auto"/None lets the planner's N²-vs-E cost term decide).
+        Application code usually wants ``repro.api.GraphSession.
+        query_many`` — same executor, plus watermark semantics, request
+        coalescing, and the exact result cache."""
         return self.engine(indexed=indexed, mesh=mesh).evaluate_many(
             queries, plan, indexed=True if indexed else None,
             layout=layout, **kw)
@@ -703,7 +750,8 @@ class TemporalGraphStore:
         Measures outside the incremental set
         (``kernels.evolve_sweep.SWEEP_MEASURES``) fall back
         transparently to independent point queries — same results,
-        none of the speedup."""
+        none of the speedup.  ``repro.api.GraphSession.sweep`` is the
+        serving-aware front door to this."""
         from repro.kernels.evolve_sweep import SWEEP_MEASURES
         scope = scope or ("node" if v is not None else "global")
         if measure in SWEEP_MEASURES:

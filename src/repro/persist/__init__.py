@@ -1,0 +1,24 @@
+"""Durability layer: WAL'd open tail + checkpointed sealed segments.
+
+``open_store(root)`` opens (or creates) a durable store root and is
+the crash-recovery entry point; ``StorePersistence`` is the hook
+object a durable store carries as ``store.persist``.  See
+``persist.wal`` for the record framing and ``persist.manifest`` for
+the on-disk layout.  Most callers want neither directly —
+``repro.api.GraphSession(path=...)`` wires the whole stack.
+"""
+from repro.persist.manifest import (load_segment_file, read_manifest,
+                                    save_segment_file, segment_name,
+                                    wal_name, write_manifest)
+from repro.persist.recovery import Recovered, StorePersistence, open_store
+from repro.persist.wal import (REC_ADVANCE, REC_DRAIN, REC_OPS, REC_PENDING,
+                               REC_SEAL, REC_TAIL, WriteAheadLog,
+                               read_records, scan)
+
+__all__ = [
+    "open_store", "Recovered", "StorePersistence", "WriteAheadLog",
+    "read_records", "scan", "read_manifest", "write_manifest",
+    "save_segment_file", "load_segment_file", "wal_name", "segment_name",
+    "REC_OPS", "REC_ADVANCE", "REC_SEAL", "REC_PENDING", "REC_DRAIN",
+    "REC_TAIL",
+]

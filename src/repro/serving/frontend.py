@@ -115,7 +115,10 @@ class MicroBatchFrontend:
     # ---------------------------------------------------------- submit
 
     def submit(self, q: Query) -> Future:
-        """Enqueue one query; resolve immediately on a cache hit."""
+        """Enqueue one query; resolve immediately on a cache hit.
+        (``repro.api.GraphSession.query``/``query_many`` wrap this with
+        construction and lifecycle — prefer them in application
+        code.)"""
         fut: Future = Future()
         key = query_cache_key(q, self.layout)
         with self._cv:

@@ -89,6 +89,15 @@ class LiveGraphStore:
     ``segment_device_budget`` bounds the device bytes the sealed log
     may hold: cold segments are spilled to host at the swap and
     reloaded on demand when a query window touches them.
+
+    A store opened through ``repro.persist.open_store`` (or
+    ``repro.api.GraphSession(path=...)``) makes the whole serving
+    lifecycle durable: ``append`` WAL-logs each batch *before*
+    buffering it, a swap logs its drain intent before ingesting and
+    persists the segment/anchor manifest before flipping the engine
+    pointer, so ``kill -9`` at any instant recovers bit-exactly.
+    ``pending`` seeds the buffer with ops recovered from that WAL —
+    they are already durable and are NOT re-logged.
     """
 
     def __init__(self, n_cap: int = 0, *, e_cap: int | None = None,
@@ -97,7 +106,8 @@ class LiveGraphStore:
                  delta_cap_hint: int | None = None,
                  group_pad_min: int = 1,
                  segment_device_budget: int | None = None,
-                 store: TemporalGraphStore | None = None):
+                 store: TemporalGraphStore | None = None,
+                 pending: Sequence[Op] = ()):
         if store is None:
             store = TemporalGraphStore(n_cap, e_cap=e_cap, layout=layout)
         if segment_device_budget is not None:
@@ -133,8 +143,14 @@ class LiveGraphStore:
         # invalidates, per the serving contract).
         self.generation = 0
         self.swap_history: list[SwapRecord] = []
-        self._pending: list[Op] = []
-        self._t_append_last = store.t_cur
+        # Recovered stores may carry an open tail past t_cur (ingested
+        # but not advanced at the crash) and a WAL-durable pending
+        # buffer: seed both time cursors so post-recovery appends keep
+        # the stream ordered against everything already logged.
+        self._pending: list[Op] = [o for o in pending if o.t > store.t_cur]
+        tail_last = store._t_l[-1] if store._t_l else store.t_cur
+        self._t_append_last = max([store.t_cur, tail_last]
+                                  + [o.t for o in self._pending])
         # The time unit the in-flight (or last) swap closes: appends
         # validate against it as well as the engine watermark, so an op
         # at the closing time cannot slip in between the swap's buffer
@@ -154,26 +170,34 @@ class LiveGraphStore:
         watermark (served history is immutable).  Legality against the
         graph state (duplicate edges, dangling endpoints, ...) is the
         store's job at swap time — the pending buffer is just a log.
-        Returns the number of ops buffered.
+        The batch is atomic: it is validated whole, WAL-logged whole
+        (durable stores — the write-ahead append happens *before* the
+        buffer append, so an acknowledged op survives any crash), then
+        buffered whole.  Returns the number of ops buffered.
         """
-        n = 0
         with self._lock:
             w = max(self._engine.t_served, self._t_closing)
+            t_last = self._t_append_last
+            batch: list[Op] = []
             for o in ops:
                 if not isinstance(o, Op):
                     o = Op(*o)
-                if o.t < self._t_append_last:
+                if o.t < t_last:
                     raise ValueError(
                         f"ops must be time-ordered: got t={o.t} after "
-                        f"t={self._t_append_last}")
+                        f"t={t_last}")
                 if o.t <= w:
                     raise ValueError(
                         f"op at t={o.t} is at or before the watermark "
                         f"t_served={w}; served history is immutable")
-                self._pending.append(o)
-                self._t_append_last = o.t
-                n += 1
-        return n
+                batch.append(o)
+                t_last = o.t
+            persist = self.store.persist
+            if persist is not None and batch:
+                persist.log_pending(batch)
+            self._pending.extend(batch)
+            self._t_append_last = t_last
+            return len(batch)
 
     @property
     def pending_ops(self) -> int:
@@ -226,6 +250,7 @@ class LiveGraphStore:
         accept the force-close)."""
         with self._swap_lock:
             t0 = time.perf_counter()
+            persist = self.store.persist
             with self._lock:
                 pending, self._pending = self._pending, []
                 t_hi = max((o.t for o in pending),
@@ -235,8 +260,20 @@ class LiveGraphStore:
                 # publish the closing time BEFORE ingesting: from here
                 # on, concurrent appends must be strictly past it
                 self._t_closing = max(self._t_closing, target)
-            n_acc = self.store.ingest(pending)
-            self.store.advance_to(target)
+                if persist is not None:
+                    # drain intent, logged while the lock still orders
+                    # us against concurrent PENDING records: replay
+                    # re-executes the ingest/advance below from the
+                    # same pending prefix, so their own WAL records
+                    # are suppressed (the drain record subsumes them)
+                    persist.log_drain(len(pending), target)
+            if persist is not None:
+                with persist.suspend_store_log():
+                    n_acc = self.store.ingest(pending)
+                    self.store.advance_to(target)
+            else:
+                n_acc = self.store.ingest(pending)
+                self.store.advance_to(target)
             added: tuple[int, ...] = ()
             evicted: tuple[int, ...] = ()
             if self.policy is not None:
@@ -245,6 +282,12 @@ class LiveGraphStore:
                 evicted = tuple(res.evicted)
             eng = self._freeze()
             with self._lock:
+                if persist is not None:
+                    # persist the manifest (sealed segments + anchors +
+                    # rotated WAL) BEFORE the engine pointer flips: once
+                    # a client can observe the new watermark, the state
+                    # below it is durable
+                    persist.checkpoint(self.store, pending=self._pending)
                 self._engine = eng
                 self.epoch += 1
                 self.generation += 1
@@ -263,6 +306,18 @@ class LiveGraphStore:
                               daemon=True)
         th.start()
         return th
+
+    def close(self) -> None:
+        """Checkpoint (pending buffer included — it replays into the
+        next session's buffer) and release the durability layer.
+        No-op for a process-resident store."""
+        persist = self.store.persist
+        if persist is None:
+            return
+        with self._swap_lock:
+            with self._lock:
+                persist.checkpoint(self.store, pending=self._pending)
+            persist.close()
 
     # ------------------------------------------------------------- read path
 

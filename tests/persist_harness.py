@@ -1,0 +1,125 @@
+"""Deterministic crash child for the kill -9 recovery tests.
+
+Run as::
+
+    python tests/persist_harness.py ROOT LAYOUT KILL_SPEC NTH
+
+The child opens a durable ``GraphSession`` at ROOT, streams a fixed
+synthetic history into it one time unit per ``ingest`` (swapping every
+``SWAP_EVERY`` units), and SIGKILLs itself at a precise point inside
+the durability plumbing chosen by KILL_SPEC — a genuine uncatchable
+death, not an exception path.  Acknowledged progress is recorded in
+``ROOT/acks.log`` (fsync'd per line) so the parent test knows exactly
+what the recovery contract obliges the reopened store to remember:
+every acked append must survive, and every query at t ≤ the recovered
+watermark must bit-match a from-scratch oracle over the same stream.
+
+Kill specs (NTH = fire on the N-th invocation of the hooked point):
+
+* ``append_wal_pre``  — mid-ingest, BEFORE the pending batch reaches
+  the WAL: the batch was never acknowledged and may vanish.
+* ``append_wal_post`` — mid-ingest, after the WAL append but before
+  the buffer mutation: durable yet unacknowledged.
+* ``drain_logged``    — mid-swap, right after the drain-intent record:
+  the drained ingest/advance never ran; replay must re-execute them.
+* ``mid_checkpoint``  — mid-swap, after the rotated WAL is written but
+  before the manifest rename: recovery must come from the OLD wal and
+  sweep the stray new one.
+* ``post_checkpoint`` — mid-swap, manifest durable but the engine
+  pointer never flipped: the recovered watermark is AHEAD of anything
+  a client observed, which is legal (monotone) and must be exact.
+* ``seal_logged``     — right after a seal's WAL record, before the
+  segment file write: replay must re-cut the segment and regenerate
+  the identical file.
+
+Exits: SIGKILL (parent sees returncode -9) when the hook fires; exit
+code 3 when the whole stream ran without the hook firing (a test
+misconfiguration — NTH was set past the run's event count).
+"""
+import os
+import signal
+import sys
+
+N_CAP = 48
+N_NODES = 32
+SEED = 11
+SWAP_EVERY = 3
+SEGMENT_MIN_OPS = 8
+
+
+def proposal_units(seed: int = SEED):
+    """The fixed proposal stream, grouped one batch per time unit.
+    Parent and child both derive it from the seed — the oracle side of
+    every bit-equality assertion."""
+    from repro.core.generate import EvolutionParams, generate_ops
+    ops = generate_ops(N_NODES, EvolutionParams(
+        m_attach=3, lam_extra=1.0, lam_remove=1.0, p_remove_node=0.02,
+        events_per_unit=6), seed=seed)
+    units: dict[int, list] = {}
+    for o in ops:
+        units.setdefault(o.t, []).append(o)
+    return [units[t] for t in sorted(units)]
+
+
+def _kill():
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def _hook(orig, before: bool, state: dict, nth: int):
+    def wrapped(*args, **kw):
+        state["n"] += 1
+        if before and state["n"] == nth:
+            _kill()
+        out = orig(*args, **kw)
+        if not before and state["n"] == nth:
+            _kill()
+        return out
+    return wrapped
+
+
+def install_kill(persist, spec: str, nth: int) -> None:
+    state = {"n": 0}
+    if spec == "append_wal_pre":
+        persist.log_pending = _hook(persist.log_pending, True, state, nth)
+    elif spec == "append_wal_post":
+        persist.log_pending = _hook(persist.log_pending, False, state, nth)
+    elif spec == "drain_logged":
+        persist.log_drain = _hook(persist.log_drain, False, state, nth)
+    elif spec == "mid_checkpoint":
+        from repro.persist import manifest as mf
+        mf.write_manifest = _hook(mf.write_manifest, True, state, nth)
+    elif spec == "post_checkpoint":
+        persist.checkpoint = _hook(persist.checkpoint, False, state, nth)
+    elif spec == "seal_logged":
+        # class-level: persist.wal is replaced at every rotation
+        from repro.persist.wal import WriteAheadLog
+        WriteAheadLog.log_seal = _hook(WriteAheadLog.log_seal, False,
+                                       state, nth)
+    else:
+        raise SystemExit(f"unknown kill spec {spec!r}")
+
+
+def main(argv) -> int:
+    root, layout, spec, nth = argv[0], argv[1], argv[2], int(argv[3])
+    from repro.api import GraphSession
+    session = GraphSession.open(root, n_cap=N_CAP, layout=layout,
+                                segment_min_ops=SEGMENT_MIN_OPS)
+    install_kill(session.store.persist, spec, nth)
+    acks = open(os.path.join(root, "acks.log"), "a")
+
+    def ack(line: str) -> None:
+        acks.write(line + "\n")
+        acks.flush()
+        os.fsync(acks.fileno())
+
+    for i, unit in enumerate(proposal_units()):
+        session.ingest(unit)
+        ack(f"unit {i} {unit[-1].t}")
+        if (i + 1) % SWAP_EVERY == 0:
+            session.flush()
+            ack(f"swap {session.watermark}")
+    return 3
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,178 @@
+"""The unified front door (repro/api.GraphSession) and the validated
+Query construction path (repro/core/plans.Query.__post_init__).
+
+Two contracts: (1) every malformed query fails at build time with a
+clear ValueError — never deep inside a jitted kernel — and watermark
+violations surface as WatermarkError, itself a ValueError; (2) the
+facade is a pure router: every result bit-matches the old entry points
+it collapses (store.query / evaluate_many / evolve / snapshot_at).
+"""
+import numpy as np
+import pytest
+
+from repro.api import GraphSession, Op, Query, WatermarkError
+from repro.core import TemporalGraphStore
+from repro.core.delta import ADD_EDGE, ADD_NODE, REM_EDGE
+from repro.core.generate import EvolutionParams, generate_ops
+
+N_CAP = 64
+
+
+def _ops(seed=3):
+    return generate_ops(48, EvolutionParams(
+        m_attach=3, lam_extra=1.0, lam_remove=1.0, p_remove_node=0.02,
+        events_per_unit=6), seed=seed)
+
+
+def _item(x):
+    return np.asarray(x).item()
+
+
+# ---------------------------------------------------------------------------
+# Query validation
+# ---------------------------------------------------------------------------
+
+
+def test_query_valid_constructions():
+    assert Query("point", "global", "num_edges", t_k=3).scope == "global"
+    # scope inference: node iff v given
+    assert Query(measure="degree", t_k=3, v=1).scope == "node"
+    assert Query(measure="num_edges", t_k=3).scope == "global"
+    q = Query("evolve", "global", "num_edges", t_k=1, t_l=9, stride=2)
+    assert q.stride == 2
+    Query("agg", "node", "degree", t_k=1, t_l=4, v=0, agg="max")
+    Query("diff", "node", "degree", t_k=2, t_l=2, v=0)   # empty-width ok
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(kind="window", measure="num_edges", t_k=1), "unknown query kind"),
+    (dict(kind="point", scope="edgewise", measure="num_edges", t_k=1),
+     "unknown scope"),
+    (dict(measure="betweenness", t_k=1), "unknown global-scope measure"),
+    (dict(measure="num_edges", v=3, t_k=1), "unknown node-scope measure"),
+    (dict(kind="point", scope="node", measure="degree", t_k=1),
+     "needs v="),
+    (dict(kind="diff", measure="num_edges", t_k=5), "needs a time range"),
+    (dict(kind="agg", measure="degree", v=0, t_k=5, t_l=3),
+     "empty time range"),
+    (dict(kind="evolve", measure="num_edges", t_k=1, t_l=9, stride=0),
+     "stride must be >= 1"),
+    (dict(kind="evolve", measure="num_edges", t_k=1, t_l=9, stride=-2),
+     "stride must be >= 1"),
+    (dict(kind="point", measure="num_edges", t_k=1, stride=4),
+     "stride is an evolve parameter"),
+    (dict(kind="agg", measure="degree", v=0, t_k=1, t_l=4, agg="median"),
+     "unknown aggregate"),
+])
+def test_query_rejects_malformed(kw, match):
+    with pytest.raises(ValueError, match=match):
+        Query(**kw)
+
+
+def test_watermark_error_is_a_valueerror():
+    assert issubclass(WatermarkError, ValueError)
+    assert issubclass(WatermarkError, RuntimeError)  # legacy handlers
+    s = GraphSession(n_cap=8, stale="raise")
+    s.ingest([(ADD_NODE, 0, 0, 1)])
+    s.flush()
+    with pytest.raises(ValueError):
+        s.query("num_nodes", t=99)
+
+
+# ---------------------------------------------------------------------------
+# GraphSession facade
+# ---------------------------------------------------------------------------
+
+
+def test_session_inmemory_flow():
+    with GraphSession(n_cap=16) as s:
+        s.ingest([(ADD_NODE, 0, 0, 1), (ADD_NODE, 1, 1, 1),
+                  Op(ADD_EDGE, 0, 1, 2)])
+        # default stale="block": the session sees its own writes
+        assert _item(s.query("degree", t=2, v=0)) == 1
+        assert s.watermark == 2
+        s.ingest([(REM_EDGE, 0, 1, 3)])
+        assert _item(s.query("num_edges", t=3)) == 0
+        got = s.query_many([Query("point", "global", "num_edges", t_k=2),
+                            Query("point", "node", "degree", t_k=3, v=1)])
+        assert [_item(x) for x in got] == [1, 0]
+        sweep = s.sweep("num_edges", t_lo=1, t_hi=3)
+        np.testing.assert_array_equal(sweep, [0, 1, 0])
+        g = s.snapshot_at(2)
+        assert _item(g.nodes.sum()) == 2
+        st = s.stats()
+        assert st["watermark"] == 3 and "pending_ops" in st
+    with pytest.raises(ValueError):
+        GraphSession()                   # in-memory needs n_cap
+
+
+def test_session_requires_query_xor_kwargs():
+    s = GraphSession(n_cap=8)
+    q = Query("point", "global", "num_nodes", t_k=1)
+    with pytest.raises(ValueError, match="not both"):
+        s.query(q, t=1)
+    s.ingest([(ADD_NODE, 0, 0, 1)])
+    assert _item(s.query(q)) == 1        # Query object alone is fine
+
+
+@pytest.mark.parametrize("layout", ["dense", "edge"])
+def test_facade_parity_with_direct_paths(layout):
+    """The facade routes, never reinterprets: results bit-match the
+    direct store entry points it collapses."""
+    ops = _ops()
+    t_max = max(o.t for o in ops)
+    direct = TemporalGraphStore(n_cap=N_CAP, layout=layout)
+    direct.ingest(ops)
+    direct.advance_to(t_max)
+
+    s = GraphSession(n_cap=N_CAP, layout=layout)
+    s.ingest(ops)
+    s.flush()
+    assert s.watermark == t_max
+
+    qs = []
+    for t in (1, t_max // 2, t_max):
+        qs.append(Query("point", "global", "num_edges", t_k=t))
+        qs.append(Query("point", "node", "degree", t_k=t, v=2))
+    qs.append(Query("agg", "node", "degree", t_k=1, t_l=t_max, v=2,
+                    agg="max"))
+    got = s.query_many(qs)
+    ref = direct.evaluate_many(qs)
+    for g, r in zip(got, ref):
+        assert np.array_equal(np.asarray(g), np.asarray(r))
+
+    np.testing.assert_array_equal(
+        s.sweep("num_edges", t_lo=1, t_hi=t_max, stride=2),
+        direct.evolve("num_edges", 1, t_max, stride=2))
+
+    g_f, g_d = s.snapshot_at(t_max // 2), direct.snapshot_at(t_max // 2)
+    np.testing.assert_array_equal(np.asarray(g_f.nodes),
+                                  np.asarray(g_d.nodes))
+
+
+def test_snapshot_respects_watermark_mode():
+    s = GraphSession(n_cap=8, stale="raise")
+    s.ingest([(ADD_NODE, 0, 0, 1)])
+    with pytest.raises(WatermarkError, match="watermark"):
+        s.snapshot_at(1)                 # pending, not served, raise mode
+    s.flush()
+    assert _item(s.snapshot_at(1).nodes.sum()) == 1
+    with pytest.raises(WatermarkError):
+        s.snapshot_at(99)                # future: nothing to swap in
+    blocking = GraphSession(n_cap=8)     # default "block" swaps for you
+    blocking.ingest([(ADD_NODE, 0, 0, 1)])
+    assert _item(blocking.snapshot_at(1).nodes.sum()) == 1
+
+
+def test_session_close_is_idempotent_and_durable(tmp_path):
+    root = str(tmp_path / "g")
+    s = GraphSession.open(root, n_cap=16)
+    s.ingest([(ADD_NODE, 0, 0, 1), (ADD_NODE, 1, 1, 2)])
+    s.close()
+    s.close()                            # second close is a no-op
+    with GraphSession.open(root) as s2:
+        # un-flushed-but-durable pending came back; ordering cursor too
+        assert _item(s2.query("num_nodes", t=2)) == 2
+        with pytest.raises(ValueError, match="time-ordered|immutable"):
+            s2.ingest([(ADD_NODE, 2, 2, 1)])
+        assert s2.ingest([(ADD_NODE, 2, 2, 3)]) == 1
