@@ -49,6 +49,12 @@ BENCHES = {
     "persistence": ("benchmarks/bench_persistence.py",
                     "benchmarks/BENCH_persistence.json",
                     ("smoke", "wal_drain_ops_per_sec")),
+    # routed read throughput through the replica stack (sync + router
+    # + replica engine dispatch) — a regression to per-query engine
+    # rebuilds or per-call sync work tanks this number first
+    "replica": ("benchmarks/bench_replica.py",
+                "benchmarks/BENCH_replica.json",
+                ("smoke", "routed_qps")),
 }
 
 

@@ -1,0 +1,242 @@
+"""Offline integrity checker for a durable graph-store root.
+
+Walks every artifact the recovery contract depends on and reports,
+per file, what holds and what is broken:
+
+* ``MANIFEST.json`` — parses, supported version, config keys present,
+  segment entries well-formed.
+* each sealed segment — file exists, loads as a (5, n) int32 block,
+  content CRC32 matches the manifest stamp, row count and time span
+  match the entry, time column is non-decreasing, and consecutive
+  segments partition time in ascending order.
+* the manifest-named WAL — magic intact, CRC frame chain walked to the
+  end; a torn tail (trailing bytes past the last intact frame) is
+  reported but is NOT corruption — it is the expected residue of a
+  crash mid-append and repair truncates it on the next open.  A
+  missing/mismatched base record (``REC_TAIL``) IS corruption: the
+  manifest names a WAL that never became durable.
+* stray ``wal_*`` files not named by the manifest (leftovers of a
+  checkpoint rotation killed before cleanup — swept on open) and
+  quarantined blobs under ``quarantine/`` (a replica's kept evidence).
+
+``--deep`` additionally performs a full readonly recovery (segments +
+WAL replay through the store's own mutation path) and reports the
+recovered watermark — the strongest offline check short of a query
+oracle.
+
+Exit codes: 0 clean (torn tails and strays allowed), 1 corruption
+found, 2 not a store root.
+
+Usage:
+  PYTHONPATH=src python scripts/fsck_graph.py ROOT [--deep] [--quiet]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.persist import manifest as mf  # noqa: E402
+from repro.persist import wal as walmod  # noqa: E402
+
+
+class Report:
+    def __init__(self, quiet: bool):
+        self.quiet = quiet
+        self.errors = 0
+        self.warnings = 0
+
+    def ok(self, path: str, msg: str) -> None:
+        if not self.quiet:
+            print(f"  ok    {path}: {msg}")
+
+    def warn(self, path: str, msg: str) -> None:
+        self.warnings += 1
+        print(f"  WARN  {path}: {msg}")
+
+    def error(self, path: str, msg: str) -> None:
+        self.errors += 1
+        print(f"  FAIL  {path}: {msg}")
+
+
+def check_manifest(root: str, rep: Report) -> dict | None:
+    path = os.path.join(root, mf.MANIFEST)
+    try:
+        with open(path) as fh:
+            manifest = json.load(fh)
+    except ValueError as exc:
+        rep.error(mf.MANIFEST, f"unparseable JSON ({exc})")
+        return None
+    if manifest.get("version") != mf.VERSION:
+        rep.error(mf.MANIFEST, f"unsupported version "
+                               f"{manifest.get('version')!r}")
+        return None
+    missing = ["config." + k for k in mf.CONFIG_KEYS
+               if k not in manifest.get("config", {})]
+    missing += [k for k in ("config", "segments", "anchors", "t_sealed",
+                            "wal_seq") if k not in manifest]
+    if missing:
+        rep.error(mf.MANIFEST, f"missing keys: {', '.join(missing)}")
+        return None
+    bad = [e.get("file", "?") for e in manifest["segments"]
+           if not all(k in e for k in ("file", "n_ops", "t_min", "t_max"))]
+    if bad:
+        rep.error(mf.MANIFEST, f"malformed segment entries: {bad}")
+        return None
+    rep.ok(mf.MANIFEST, f"version {mf.VERSION}, "
+                        f"{len(manifest['segments'])} segments, "
+                        f"wal_seq {manifest['wal_seq']}, "
+                        f"t_sealed {manifest['t_sealed']}")
+    return manifest
+
+
+def check_segments(root: str, manifest: dict, rep: Report) -> None:
+    prev_t_max = None
+    for entry in manifest["segments"]:
+        rel = entry["file"]
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            rep.error(rel, "named by the manifest but missing")
+            continue
+        try:
+            cols = mf.load_segment_file(path,
+                                        expected_crc=entry.get("crc32"))
+        except mf.SegmentCorruptError as exc:
+            rep.error(rel, str(exc))
+            continue
+        except Exception as exc:          # unreadable npy
+            rep.error(rel, f"unreadable ({type(exc).__name__}: {exc})")
+            continue
+        t = np.asarray(cols["t"])
+        if len(t) != int(entry["n_ops"]):
+            rep.error(rel, f"row count {len(t)} != manifest n_ops "
+                           f"{entry['n_ops']}")
+            continue
+        if len(t) and (int(t.min()) != int(entry["t_min"])
+                       or int(t.max()) != int(entry["t_max"])):
+            rep.error(rel, f"time span [{t.min()}, {t.max()}] != manifest "
+                           f"[{entry['t_min']}, {entry['t_max']}]")
+            continue
+        if len(t) and np.any(np.diff(t) < 0):
+            rep.error(rel, "time column not non-decreasing")
+            continue
+        if prev_t_max is not None and int(entry["t_min"]) <= prev_t_max:
+            rep.error(rel, f"overlaps previous segment "
+                           f"(t_min {entry['t_min']} <= {prev_t_max})")
+            continue
+        prev_t_max = int(entry["t_max"])
+        rep.ok(rel, f"{entry['n_ops']} ops, "
+                    f"t [{entry['t_min']}, {entry['t_max']}], crc ok")
+
+
+def check_wal(root: str, manifest: dict, rep: Report) -> None:
+    rel = mf.wal_name(int(manifest["wal_seq"]))
+    path = os.path.join(root, rel)
+    if not os.path.exists(path):
+        rep.error(rel, "named by the manifest but missing")
+        return
+    with open(path, "rb") as fh:
+        buf = fh.read()
+    if buf[:len(walmod.MAGIC)] != walmod.MAGIC:
+        rep.error(rel, "bad magic — not a WAL")
+        return
+    payloads, valid = walmod.scan_bytes(buf)
+    records = []
+    for i, p in enumerate(payloads):
+        try:
+            records.append(walmod.decode(p))
+        except Exception as exc:
+            rep.error(rel, f"frame {i} is CRC-intact but undecodable "
+                           f"({exc})")
+            return
+    if not records or records[0][0] != walmod.REC_TAIL:
+        rep.error(rel, "missing base (REC_TAIL) record — the manifest "
+                       "names a WAL that never became durable")
+        return
+    base = records[0][1]
+    if int(base["t_cur"]) < int(manifest["t_sealed"]):
+        rep.error(rel, f"base t_cur {base['t_cur']} behind manifest "
+                       f"t_sealed {manifest['t_sealed']}")
+        return
+    torn = len(buf) - valid
+    kinds = {}
+    for rtype, _fields in records:
+        name = walmod.REC_NAMES.get(rtype, str(rtype))
+        kinds[name] = kinds.get(name, 0) + 1
+    mix = ", ".join(f"{k}:{n}" for k, n in sorted(kinds.items()))
+    desc = f"{len(records)} records ({mix}), base t_cur {base['t_cur']}"
+    if torn:
+        rep.warn(rel, f"{desc}; torn tail of {torn} bytes (crash "
+                      "residue — repaired on next open)")
+    else:
+        rep.ok(rel, desc)
+
+
+def check_strays(root: str, manifest: dict, rep: Report) -> None:
+    named = mf.wal_name(int(manifest["wal_seq"]))
+    for name in sorted(os.listdir(root)):
+        if name.startswith("wal_") and name != named \
+                and not name.endswith(".tmp"):
+            rep.warn(name, "stray WAL not named by the manifest "
+                           "(rotation leftover — swept on open)")
+    qdir = os.path.join(root, "quarantine")
+    if os.path.isdir(qdir):
+        blobs = os.listdir(qdir)
+        if blobs:
+            rep.warn("quarantine/", f"{len(blobs)} quarantined blob(s) "
+                                    "kept for diagnosis")
+
+
+def deep_check(root: str, rep: Report) -> None:
+    from repro.persist import open_store
+    try:
+        rec = open_store(root, readonly=True, verify=True)
+    except Exception as exc:
+        rep.error(".", f"deep readonly recovery failed "
+                       f"({type(exc).__name__}: {exc})")
+        return
+    rep.ok(".", f"deep recovery ok: watermark t={rec.store.t_cur}, "
+                f"{len(rec.store._segments)} segments, "
+                f"{len(rec.pending)} pending ops")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("root", help="store root (contains MANIFEST.json)")
+    ap.add_argument("--deep", action="store_true",
+                    help="also run a full readonly recovery")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print only warnings and failures")
+    args = ap.parse_args()
+
+    if not os.path.isdir(args.root):
+        print(f"{args.root}: not a directory")
+        return 2
+    if not os.path.exists(os.path.join(args.root, mf.MANIFEST)):
+        print(f"{args.root}: no {mf.MANIFEST} — not a store root")
+        return 2
+
+    print(f"fsck {os.path.abspath(args.root)}")
+    rep = Report(quiet=args.quiet)
+    manifest = check_manifest(args.root, rep)
+    if manifest is not None:
+        check_segments(args.root, manifest, rep)
+        check_wal(args.root, manifest, rep)
+        check_strays(args.root, manifest, rep)
+        if args.deep and rep.errors == 0:
+            deep_check(args.root, rep)
+    verdict = "CORRUPT" if rep.errors else "clean"
+    print(f"{verdict}: {rep.errors} error(s), {rep.warnings} warning(s)")
+    return 1 if rep.errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

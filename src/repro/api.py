@@ -71,6 +71,8 @@ class GraphSession:
                  policy=None, mesh=None, stale: str = "block",
                  max_batch: int = 64, max_delay_ms: float = 0.0,
                  cache_entries: int = 4096, fsync: bool = True,
+                 max_pending: int | None = None, overload: str = "raise",
+                 shed_after_ms: float | None = None,
                  segment_min_ops: int | None = None,
                  segment_device_budget: int | None = None, **live_kw):
         self.path = path
@@ -97,7 +99,10 @@ class GraphSession:
                                    pending=pending, **live_kw)
         self.frontend = MicroBatchFrontend(
             self.live, max_batch=max_batch, max_delay_ms=max_delay_ms,
-            cache_entries=cache_entries, stale=stale)
+            cache_entries=cache_entries, stale=stale,
+            max_pending=max_pending, overload=overload,
+            shed_after_ms=shed_after_ms)
+        self._publisher = None
         self._closed = False
 
     # ----------------------------------------------------------- lifecycle
@@ -220,3 +225,54 @@ class GraphSession:
                 "watermark": self.watermark,
                 "cache_hits": self.frontend.stats.cache_hits,
                 "cache_misses": self.frontend.stats.cache_misses}
+
+    # --------------------------------------------------------- replication
+
+    def publish_to(self, publish_root: str):
+        """Make this (durable) session a replication source: every
+        epoch swap ships its checkpoint's manifest diff — new sealed
+        segments, the current WAL, the manifest last — into
+        ``publish_root``.  Returns the ``SegmentPublisher``; hand
+        ``publisher.transport()`` (or just the directory) to
+        ``GraphSession.open_replica`` on the read side."""
+        if self.path is None:
+            raise ValueError("an in-memory session has no checkpoint "
+                             "artifacts to publish; open with path=...")
+        from repro.replica import SegmentPublisher
+        pub = SegmentPublisher(self.path, publish_root).attach(self.live)
+        pub.publish()                    # ship the current state eagerly
+        self._publisher = pub
+        return pub
+
+    @classmethod
+    def open_replica(cls, source, local_root: str, **kw):
+        """Open a ``ReadReplica`` of a writer: ``source`` is a writer's
+        publish/store directory (string) or any ``Transport``.  The
+        replica mirrors into ``local_root``, serves at its own
+        watermark, and keyword args (``fetch_timeout``,
+        ``anchor_budget_bytes``, ``seed``, ...) pass through.  Call
+        ``.sync()`` per poll or ``.start(interval)`` for a background
+        fetch loop."""
+        from repro.replica import LocalDirTransport, ReadReplica
+        transport = (LocalDirTransport(source) if isinstance(source, str)
+                     else source)
+        replica = ReadReplica(transport, local_root, **kw)
+        try:
+            replica.sync()
+        except Exception:
+            # source unreachable at open: a replica with a local mirror
+            # still serves its old watermark; a fresh one waits for the
+            # first successful sync (stats carry the error)
+            if replica.store is None:
+                raise
+        return replica
+
+    @staticmethod
+    def open_router(replicas: dict | None = None, **kw):
+        """A watermark-aware ``QueryRouter``; ``replicas`` maps name ->
+        target (``ReadReplica`` or anything with its serving surface)."""
+        from repro.replica import QueryRouter
+        router = QueryRouter(**kw)
+        for name, target in (replicas or {}).items():
+            router.register(name, target)
+        return router

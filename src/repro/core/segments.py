@@ -132,15 +132,18 @@ class Segment:
         return save_segment_file(path, self.host_columns())
 
     @classmethod
-    def load(cls, path: str, *, mmap: bool = True) -> "Segment":
+    def load(cls, path: str, *, mmap: bool = True,
+             expected_crc: int | None = None) -> "Segment":
         """Rehydrate a sealed segment from disk.  With ``mmap`` (the
         default) the columns are mmap-backed views — construction reads
         only the header and boundary pages, and the residency pass's
         spill/reload cycle pages op data in and out on demand exactly
         as it does for RAM-resident history (``np.ascontiguousarray``
-        adopts the contiguous int32 rows without copying)."""
+        adopts the contiguous int32 rows without copying).
+        ``expected_crc`` re-checks the manifest's CRC32 stamp against
+        the block content before the segment is trusted."""
         from repro.persist.manifest import load_segment_file
-        cols = load_segment_file(path, mmap=mmap)
+        cols = load_segment_file(path, mmap=mmap, expected_crc=expected_crc)
         return cls(cols["op"], cols["u"], cols["v"], cols["slot"],
                    cols["t"])
 

@@ -7,18 +7,22 @@ object a durable store carries as ``store.persist``.  See
 the on-disk layout.  Most callers want neither directly —
 ``repro.api.GraphSession(path=...)`` wires the whole stack.
 """
-from repro.persist.manifest import (load_segment_file, read_manifest,
-                                    save_segment_file, segment_name,
+from repro.persist.manifest import (SegmentCorruptError, load_segment_file,
+                                    read_manifest, save_segment_file,
+                                    segment_block_from_bytes,
+                                    segment_file_crc, segment_name,
                                     wal_name, write_manifest)
 from repro.persist.recovery import Recovered, StorePersistence, open_store
 from repro.persist.wal import (REC_ADVANCE, REC_DRAIN, REC_OPS, REC_PENDING,
                                REC_SEAL, REC_TAIL, WriteAheadLog,
-                               read_records, scan)
+                               iter_frames, read_records, scan, scan_bytes)
 
 __all__ = [
     "open_store", "Recovered", "StorePersistence", "WriteAheadLog",
-    "read_records", "scan", "read_manifest", "write_manifest",
-    "save_segment_file", "load_segment_file", "wal_name", "segment_name",
+    "read_records", "scan", "scan_bytes", "iter_frames",
+    "read_manifest", "write_manifest", "save_segment_file",
+    "load_segment_file", "segment_file_crc", "segment_block_from_bytes",
+    "SegmentCorruptError", "wal_name", "segment_name",
     "REC_OPS", "REC_ADVANCE", "REC_SEAL", "REC_PENDING", "REC_DRAIN",
     "REC_TAIL",
 ]

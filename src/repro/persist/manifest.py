@@ -26,14 +26,20 @@ always names a WAL that exists and whose base record matches it.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
+import zlib
 
 import numpy as np
 
 MANIFEST = "MANIFEST.json"
 SEGMENT_DIR = "segments"
 VERSION = 1
+
+
+class SegmentCorruptError(ValueError):
+    """A segment block that fails shape, dtype, or CRC32 validation."""
 
 CONFIG_KEYS = ("n_cap", "e_cap", "layout", "segmented", "segment_min_ops",
                "enforce_invertible")
@@ -70,31 +76,74 @@ def atomic_write_bytes(path: str, data: bytes) -> None:
     _fsync_dir(os.path.dirname(path) or ".")
 
 
+def segment_block_crc(block: np.ndarray) -> int:
+    """CRC32 of a (5, n) int32 segment block's raw bytes — the stamp
+    recorded per segment entry in the manifest."""
+    return zlib.crc32(np.ascontiguousarray(block, np.int32).tobytes())
+
+
 def save_segment_file(path: str, cols: dict[str, np.ndarray]) -> int:
     """Write one sealed segment's columns as a (5, n) int32 ``.npy``
     block, atomically.  Returns the crc32 of the block bytes (recorded
     in the manifest for integrity checks)."""
-    import io
-    import zlib
     block = np.stack([np.ascontiguousarray(cols[c], np.int32)
                       for c in ("op", "u", "v", "slot", "t")])
     buf = io.BytesIO()
     np.save(buf, block)
-    data = buf.getvalue()
-    atomic_write_bytes(path, data)
-    return zlib.crc32(block.tobytes())
+    atomic_write_bytes(path, buf.getvalue())
+    return segment_block_crc(block)
 
 
-def load_segment_file(path: str, *, mmap: bool = True) -> dict[str, np.ndarray]:
+def _check_block(block: np.ndarray, ctx: str,
+                 expected_crc: int | None) -> np.ndarray:
+    if block.ndim != 2 or block.shape[0] != 5 or block.dtype != np.int32:
+        raise SegmentCorruptError(
+            f"{ctx}: not a (5, n) int32 segment block "
+            f"(got {block.dtype}{block.shape})")
+    if expected_crc is not None:
+        got = segment_block_crc(block)
+        if got != int(expected_crc):
+            raise SegmentCorruptError(
+                f"{ctx}: crc32 mismatch (stamped {int(expected_crc)}, "
+                f"content {got}) — the block is corrupt")
+    return block
+
+
+def load_segment_file(path: str, *, mmap: bool = True,
+                      expected_crc: int | None = None
+                      ) -> dict[str, np.ndarray]:
     """Columns of a sealed segment, mmap-backed by default — rows of
     the C-ordered (5, n) block are themselves contiguous int32, so
     ``Segment`` adopts them without copying and only touched pages are
-    ever read."""
+    ever read.
+
+    ``expected_crc`` re-checks the manifest's CRC32 stamp against the
+    content (reading every page through the mmap once — recovery's
+    rebuild pass touches them all anyway); a mismatch raises
+    ``SegmentCorruptError`` instead of serving silently wrong history.
+    """
     block = np.load(path, mmap_mode="r" if mmap else None)
-    if block.ndim != 2 or block.shape[0] != 5 or block.dtype != np.int32:
-        raise ValueError(f"{path}: not a (5, n) int32 segment block "
-                         f"(got {block.dtype}{block.shape})")
+    _check_block(block, path, expected_crc)
     return dict(zip(("op", "u", "v", "slot", "t"), block))
+
+
+def segment_block_from_bytes(data: bytes, *, ctx: str = "<bytes>",
+                             expected_crc: int | None = None) -> np.ndarray:
+    """Parse + validate a fetched segment payload WITHOUT touching the
+    filesystem — the replica's fetch path verifies bytes before they
+    are ever written locally.  Raises ``SegmentCorruptError`` on a
+    torn/corrupt payload (np.load failures included)."""
+    try:
+        block = np.load(io.BytesIO(data))
+    except Exception as exc:             # torn npy header / short body
+        raise SegmentCorruptError(f"{ctx}: unreadable segment payload "
+                                  f"({exc})") from exc
+    return _check_block(block, ctx, expected_crc)
+
+
+def segment_file_crc(path: str) -> int:
+    """CRC32 stamp recomputed from a segment file on disk."""
+    return segment_block_crc(np.load(path, mmap_mode="r"))
 
 
 def write_manifest(root: str, manifest: dict) -> None:

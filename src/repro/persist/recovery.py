@@ -71,6 +71,10 @@ class StorePersistence:
         self._suspend_store_log = False
         self.wal_seq = 1
         self.wal: WriteAheadLog | None = None
+        # CRC32 stamp per segment index, recorded at the (single) write
+        # of each immutable file and carried into every manifest — the
+        # fetch/open side re-verifies content against it
+        self._seg_crcs: dict[int, int] = {}
         os.makedirs(os.path.join(root, mf.SEGMENT_DIR), exist_ok=True)
 
     # ------------------------------------------------------------- plumbing
@@ -150,7 +154,7 @@ class StorePersistence:
             self.wal.log_seal(t_seal, k, force)
         path = os.path.join(self.root, mf.segment_name(index))
         if not os.path.exists(path):
-            segment.save(path)
+            self._seg_crcs[index] = segment.save(path)
 
     # ------------------------------------------------------------ rotation
     def _manifest_dict(self, store, wal_seq: int) -> dict:
@@ -158,10 +162,13 @@ class StorePersistence:
         for i, s in enumerate(store._segments):
             path = os.path.join(self.root, mf.segment_name(i))
             if not os.path.exists(path):      # pre-attach segments
-                s.save(path)
+                self._seg_crcs[i] = s.save(path)
+            if i not in self._seg_crcs:       # e.g. replay found the file
+                self._seg_crcs[i] = mf.segment_file_crc(path)
             segments.append({"file": mf.segment_name(i),
                              "n_ops": int(s.n_ops),
-                             "t_min": int(s.t_min), "t_max": int(s.t_max)})
+                             "t_min": int(s.t_min), "t_max": int(s.t_max),
+                             "crc32": int(self._seg_crcs[i])})
         return {
             "config": {"n_cap": int(store.n_cap), "e_cap": int(store.e_cap),
                        "layout": store.layout,
@@ -324,7 +331,8 @@ def open_store(root: str, *, n_cap: int | None = None,
                policy=None, segment_min_ops: int | None = None,
                segment_device_budget: int | None = None,
                enforce_invertible: bool | None = None,
-               fsync: bool = True, verify: bool = False) -> Recovered:
+               fsync: bool = True, verify: bool = False,
+               readonly: bool = False) -> Recovered:
     """Open (or create) a durable store root.
 
     Fresh root: builds a ``TemporalGraphStore`` from the keyword
@@ -335,15 +343,29 @@ def open_store(root: str, *, n_cap: int | None = None,
     and the rest are ignored); ``policy`` and
     ``segment_device_budget`` are runtime attachments, never persisted.
 
-    ``verify=True`` cross-checks each segment file's (n_ops, t_min,
-    t_max) against its manifest entry (reads only the header pages of
-    the mmap); the WAL is CRC-framed per record regardless.
+    Segment files whose manifest entry carries a ``crc32`` stamp are
+    re-verified against it at open — a bit-flipped block raises
+    ``SegmentCorruptError`` instead of serving silently wrong history.
+    ``verify=True`` additionally cross-checks each file's (n_ops,
+    t_min, t_max) against its manifest entry; the WAL is CRC-framed
+    per record regardless.
+
+    ``readonly=True`` is the replica open: it recovers the exact state
+    the artifacts describe (manifest -> segments -> WAL-prefix replay,
+    torn tails tolerated) but attaches NO persistence — the WAL is
+    never repaired, truncated, or reopened for append, no stray-file
+    cleanup runs, and the returned store has ``persist=None`` so its
+    mutation paths log nothing.  The root may be another process's
+    live directory or a replica's local mirror of one.
     """
     from repro.core.segments import Segment, build_merged_nodes
     from repro.core.store import TemporalGraphStore
 
     manifest = mf.read_manifest(root) if os.path.isdir(root) else None
     if manifest is None:
+        if readonly:
+            raise ValueError(f"{root!r} has no manifest — a readonly "
+                             "open cannot create a store")
         if n_cap is None:
             raise ValueError(f"{root!r} has no manifest and no n_cap was "
                              "given to create a fresh store")
@@ -377,7 +399,8 @@ def open_store(root: str, *, n_cap: int | None = None,
         segment_device_budget=segment_device_budget)
 
     for entry in manifest["segments"]:
-        seg = Segment.load(os.path.join(root, entry["file"]))
+        seg = Segment.load(os.path.join(root, entry["file"]),
+                           expected_crc=entry.get("crc32"))
         if verify and (seg.n_ops != entry["n_ops"]
                        or seg.t_min != entry["t_min"]
                        or seg.t_max != entry["t_max"]):
@@ -387,9 +410,8 @@ def open_store(root: str, *, n_cap: int | None = None,
     store._t_sealed = int(manifest["t_sealed"])
     build_merged_nodes(store._segments, store._merged)
 
-    persist = StorePersistence(root, fsync=fsync)
-    persist.wal_seq = int(manifest["wal_seq"])
-    wal_path = persist._wal_path(persist.wal_seq)
+    wal_seq = int(manifest["wal_seq"])
+    wal_path = os.path.join(root, mf.wal_name(wal_seq))
     records = list(walmod.read_records(wal_path)) \
         if os.path.exists(wal_path) else []
     if not records or records[0][0] != walmod.REC_TAIL:
@@ -409,6 +431,18 @@ def open_store(root: str, *, n_cap: int | None = None,
     _rebuild_host_state(store, manifest["anchors"])
 
     pending: list = []
+    if readonly:
+        # no persistence attached: replay through the public mutation
+        # API exactly as below (store.persist is None, so nothing
+        # logs), leave the artifacts byte-untouched
+        _replay(store, records[1:], pending)
+        return Recovered(store=store, pending=pending)
+
+    persist = StorePersistence(root, fsync=fsync)
+    persist.wal_seq = wal_seq
+    for i, entry in enumerate(manifest["segments"]):
+        if entry.get("crc32") is not None:
+            persist._seg_crcs[i] = int(entry["crc32"])
     persist.replaying = True
     try:
         store.persist = persist

@@ -141,6 +141,40 @@ def decode(payload: bytes):
 
 # ----------------------------------------------------------------- reading
 
+def iter_frames(buf: bytes, start: int | None = None
+                ) -> Iterator[tuple[bytes, int]]:
+    """Yield (payload, end_offset) for every intact frame of a WAL
+    byte buffer, starting at byte offset ``start`` (default: right
+    after the magic; ``start`` must sit on a frame boundary).  Stops at
+    the first torn or corrupt frame.  This is the incremental consumer
+    used by read replicas: re-fetch the (append-only) log bytes, keep
+    the consumed offset, decode only what is new."""
+    if buf[:len(MAGIC)] != MAGIC:
+        return
+    off = len(MAGIC) if start is None else max(int(start), len(MAGIC))
+    while off + _HEADER.size <= len(buf):
+        length, crc = _HEADER.unpack_from(buf, off)
+        end = off + _HEADER.size + length
+        if length > _MAX_RECORD or end > len(buf):
+            return                       # torn tail
+        payload = buf[off + _HEADER.size:end]
+        if zlib.crc32(payload) != crc:
+            return                       # corrupt record: stop here
+        yield payload, end
+        off = end
+
+
+def scan_bytes(buf: bytes) -> tuple[list[bytes], int]:
+    """Every intact record payload of a WAL byte buffer, plus the
+    offset of the first byte past the last intact record."""
+    out: list[bytes] = []
+    off = len(MAGIC) if buf[:len(MAGIC)] == MAGIC else 0
+    for payload, end in iter_frames(buf):
+        out.append(payload)
+        off = end
+    return out, off
+
+
 def scan(path: str) -> tuple[list[bytes], int]:
     """Read every intact record payload; returns (payloads, n_valid_bytes).
 
@@ -150,21 +184,7 @@ def scan(path: str) -> tuple[list[bytes], int]:
     offset repair should truncate to."""
     with open(path, "rb") as fh:
         buf = fh.read()
-    if buf[:len(MAGIC)] != MAGIC:
-        return [], 0
-    out: list[bytes] = []
-    off = len(MAGIC)
-    while off + _HEADER.size <= len(buf):
-        length, crc = _HEADER.unpack_from(buf, off)
-        end = off + _HEADER.size + length
-        if length > _MAX_RECORD or end > len(buf):
-            break                        # torn tail
-        payload = buf[off + _HEADER.size:end]
-        if zlib.crc32(payload) != crc:
-            break                        # corrupt record: stop here
-        out.append(payload)
-        off = end
-    return out, off
+    return scan_bytes(buf)
 
 
 def read_records(path: str) -> Iterator[tuple[int, dict]]:

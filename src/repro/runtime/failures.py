@@ -1,4 +1,4 @@
-"""Failure injection + recovery harness.
+"""Failure injection + recovery harness for the training loop.
 
 On a real cluster, node failure surfaces as a raised exception from the
 collective runtime (or a coordinator timeout).  The training driver's
@@ -8,30 +8,40 @@ materialized snapshot + delta chain) and resume from its step counter.
 The synthetic-data pipeline is stateless, so the token stream continues
 exactly.
 
-``FailureInjector`` makes that path testable on one host.
+``FailureInjector`` makes that path testable on one host.  It is the
+training-loop face of the shared fault-injection layer
+(``repro.replica.faults``) — the replication chaos tests use the same
+``FaultInjector`` core for torn writes, bit flips, dropped/delayed
+transfers, and EIO, so one seeded schedule drives every failure mode
+in the repo.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
+from repro.replica.faults import FaultInjector, FaultRule, InjectedFault
 
-class InjectedFailure(RuntimeError):
+
+class InjectedFailure(InjectedFault):
     pass
 
 
-@dataclasses.dataclass
-class FailureInjector:
+class FailureInjector(FaultInjector):
     """Raises InjectedFailure at the given steps (once each)."""
-    fail_at: tuple[int, ...] = ()
 
-    def __post_init__(self):
-        self._pending = set(self.fail_at)
+    def __init__(self, fail_at: tuple[int, ...] = ()):
+        self.fail_at = tuple(fail_at)
+        super().__init__([FaultRule(point="step", kind="raise",
+                                    at=self.fail_at, exc=InjectedFailure)])
 
-    def check(self, step: int) -> None:
-        if step in self._pending:
-            self._pending.discard(step)
-            raise InjectedFailure(f"injected node failure at step {step}")
+    def check(self, step: int) -> None:   # noqa: D401 — legacy signature
+        super().check("step", value=step)
+
+    @property
+    def _pending(self) -> set:
+        """Steps scheduled but not yet fired (legacy test surface)."""
+        return set().union(set(), *(r._at_pending for r in self.rules
+                                    if r.point == "step"))
 
 
 def run_with_recovery(train_loop: Callable[[int], int], store,

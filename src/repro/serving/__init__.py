@@ -3,7 +3,7 @@
 # The batch engine (repro.core) stays the execution substrate; this
 # package owns everything that makes it continuously-serving.
 from repro.serving.frontend import (FrontendStats, MicroBatchFrontend,
-                                    query_cache_key)
+                                    OverloadError, query_cache_key)
 from repro.serving.ingest import LiveGraphStore, SwapRecord, WatermarkError
 from repro.serving.policy import (PeriodicMaterializationPolicy,
                                   RebalanceResult, WorkloadStats,
@@ -11,6 +11,7 @@ from repro.serving.policy import (PeriodicMaterializationPolicy,
 
 __all__ = [
     "FrontendStats", "LiveGraphStore", "MicroBatchFrontend",
+    "OverloadError",
     "PeriodicMaterializationPolicy", "RebalanceResult", "SwapRecord",
     "WatermarkError", "WorkloadMaterializationPolicy", "WorkloadStats",
     "query_cache_key",

@@ -39,7 +39,15 @@ import numpy as np
 from repro.core.plans import Query
 from repro.serving.ingest import LiveGraphStore, WatermarkError
 
-__all__ = ["MicroBatchFrontend", "FrontendStats", "query_cache_key"]
+__all__ = ["MicroBatchFrontend", "FrontendStats", "OverloadError",
+           "query_cache_key"]
+
+
+class OverloadError(RuntimeError):
+    """The serving path is saturated: the request was rejected at
+    admission (``max_pending`` bound) or shed at dispatch (aged past
+    ``shed_after_ms``).  Callers should back off and retry — shedding
+    early and explicitly beats queueing into timeout territory."""
 
 
 def query_cache_key(q: Query, layout: str | None) -> tuple:
@@ -63,6 +71,9 @@ class FrontendStats:
     cache_misses: int = 0
     coalesced_dupes: int = 0
     max_batch_seen: int = 0
+    rejected: int = 0                    # bounced at the max_pending bound
+    shed: int = 0                        # dropped at dispatch: too old
+    max_pending_seen: int = 0
 
     def batch_occupancy(self) -> float:
         return self.served / self.batches if self.batches else 0.0
@@ -74,6 +85,8 @@ class MicroBatchFrontend:
     def __init__(self, live: LiveGraphStore, *, max_batch: int = 64,
                  max_delay_ms: float = 2.0, cache_entries: int = 4096,
                  stale: str = "raise", layout: str | None = None,
+                 max_pending: int | None = None, overload: str = "raise",
+                 shed_after_ms: float | None = None,
                  **evaluate_kw):
         self.live = live
         self.max_batch = int(max_batch)
@@ -81,6 +94,22 @@ class MicroBatchFrontend:
         self.cache_entries = int(cache_entries)
         self.stale = stale
         self.layout = layout
+        # Backpressure.  ``max_pending`` bounds the queue: a submit
+        # past it either raises ``OverloadError`` (overload="raise" —
+        # the caller hears "slow down" immediately) or blocks until
+        # the scheduler frees space (overload="block" — producers are
+        # paced instead of refused; needs a running drain thread or a
+        # concurrent flusher).  ``shed_after_ms`` is the dispatch-side
+        # valve: a request that aged past it is shed with
+        # ``OverloadError`` rather than evaluated — under sustained
+        # overload, serving a request whose client already gave up
+        # only steals device time from the ones still waiting.
+        if overload not in ("raise", "block"):
+            raise ValueError(f"unknown overload policy {overload!r}")
+        self.max_pending = None if max_pending is None else int(max_pending)
+        self.overload = overload
+        self.shed_after_ms = (None if shed_after_ms is None
+                              else float(shed_after_ms))
         self.evaluate_kw = evaluate_kw
         self.stats = FrontendStats()
         self._cache: OrderedDict[tuple, tuple[int, object]] = OrderedDict()
@@ -129,7 +158,17 @@ class MicroBatchFrontend:
                 fut.set_result(hit)
                 return fut
             self.stats.cache_misses += 1
+            while (self.max_pending is not None
+                   and len(self._queue) >= self.max_pending):
+                if self.overload == "raise":
+                    self.stats.rejected += 1
+                    raise OverloadError(
+                        f"{len(self._queue)} requests already pending "
+                        f"(max_pending={self.max_pending})")
+                self._cv.wait()          # paced: drain frees space
             self._queue.append((q, key, fut, time.perf_counter()))
+            self.stats.max_pending_seen = max(self.stats.max_pending_seen,
+                                              len(self._queue))
             self._cv.notify()
             full = len(self._queue) >= self.max_batch
         if full and self._thread is None:
@@ -172,8 +211,25 @@ class MicroBatchFrontend:
         with self._cv:
             batch, self._queue = (self._queue[:self.max_batch],
                                   self._queue[self.max_batch:])
+            self._cv.notify_all()        # wake blocked submitters
         if not batch:
             return 0
+        if self.shed_after_ms is not None:
+            cutoff = time.perf_counter() - self.shed_after_ms / 1e3
+            kept = []
+            for entry in batch:
+                if entry[3] < cutoff:
+                    self.stats.shed += 1
+                    entry[2].set_exception(OverloadError(
+                        f"request shed after waiting past "
+                        f"{self.shed_after_ms}ms"))
+                else:
+                    kept.append(entry)
+            if not kept:
+                return len(batch)
+            n_shed, batch = len(batch) - len(kept), kept
+        else:
+            n_shed = 0
         gen = self.live.generation
         w = self.live.t_served
         if self.stale == "raise":
@@ -190,7 +246,7 @@ class MicroBatchFrontend:
                 else:
                     servable.append(entry)
             if not servable:
-                return len(batch)
+                return len(batch) + n_shed
         else:
             servable = batch
         # collapse duplicate keys: one evaluation, every future filled
@@ -211,7 +267,7 @@ class MicroBatchFrontend:
             for futs in uniq.values():
                 for f in futs:
                     f.set_exception(exc)
-            return len(batch)
+            return len(batch) + n_shed
         for q, (key, futs), r in zip(uniq_qs, uniq.items(), results):
             value = np.asarray(r)
             value = value.item() if value.ndim == 0 else value
@@ -225,7 +281,7 @@ class MicroBatchFrontend:
         self.stats.served += len(batch)
         self.stats.max_batch_seen = max(self.stats.max_batch_seen,
                                         len(batch))
-        return len(batch)
+        return len(batch) + n_shed
 
     def _scheduler(self) -> None:
         while True:

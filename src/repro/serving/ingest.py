@@ -159,6 +159,12 @@ class LiveGraphStore:
         self._t_closing = store.t_cur
         self._lock = threading.RLock()       # pending buffer + flip
         self._swap_lock = threading.Lock()   # one swap in flight
+        # post-swap callbacks (fed the SwapRecord): replication publish
+        # hooks live here.  They run on the swap thread AFTER the
+        # checkpoint and the engine flip — the artifacts a listener
+        # ships are exactly the just-persisted ones.
+        self._swap_listeners: list = []
+        self.listener_errors: list[BaseException] = []
         self._engine = self._freeze()
 
     # ------------------------------------------------------------ write path
@@ -297,7 +303,21 @@ class LiveGraphStore:
                 seconds=time.perf_counter() - t0,
                 anchors_added=added, anchors_evicted=evicted)
             self.swap_history.append(rec)
+            for fn in list(self._swap_listeners):
+                try:
+                    fn(rec)
+                except Exception as exc:  # noqa: BLE001 — a failed
+                    # publish must not take down serving; the writer
+                    # keeps its own durable copy and the listener runs
+                    # again at the next swap
+                    self.listener_errors.append(exc)
             return rec
+
+    def add_swap_listener(self, fn) -> None:
+        """Register a post-swap callback ``fn(SwapRecord)``.  Runs on
+        the swap thread after checkpoint + engine flip; exceptions are
+        collected in ``listener_errors`` rather than raised."""
+        self._swap_listeners.append(fn)
 
     def swap_async(self) -> threading.Thread:
         """Run one epoch swap on a daemon thread; the frozen epoch

@@ -35,6 +35,17 @@ Kill specs (NTH = fire on the N-th invocation of the hooked point):
 Exits: SIGKILL (parent sees returncode -9) when the hook fires; exit
 code 3 when the whole stream ran without the hook firing (a test
 misconfiguration — NTH was set past the run's event count).
+
+Replication extensions (tests/test_replica.py):
+
+* KILL_SPEC ``none`` installs no hook: the child streams the whole
+  history and exits 0 — with a nonzero NTH it sleeps ``NTH`` ms per
+  unit, making it a long-running writer the parent can ``kill -9`` at
+  an arbitrary real instant and then *restart* (the reopened session
+  skips units already acknowledged and streams the rest).
+* A 5th argument names a publish root: the child attaches a
+  ``SegmentPublisher`` so every swap ships its manifest diff — the
+  writer side of the replica chaos tests.
 """
 import os
 import signal
@@ -101,10 +112,19 @@ def install_kill(persist, spec: str, nth: int) -> None:
 
 def main(argv) -> int:
     root, layout, spec, nth = argv[0], argv[1], argv[2], int(argv[3])
+    publish_root = argv[4] if len(argv) > 4 else None
+    import time
+
     from repro.api import GraphSession
     session = GraphSession.open(root, n_cap=N_CAP, layout=layout,
                                 segment_min_ops=SEGMENT_MIN_OPS)
-    install_kill(session.store.persist, spec, nth)
+    if publish_root:
+        session.publish_to(publish_root)
+    sleep_s = 0.0
+    if spec == "none":
+        sleep_s = nth / 1000.0           # NTH doubles as ms-per-unit
+    else:
+        install_kill(session.store.persist, spec, nth)
     acks = open(os.path.join(root, "acks.log"), "a")
 
     def ack(line: str) -> None:
@@ -112,12 +132,25 @@ def main(argv) -> int:
         acks.flush()
         os.fsync(acks.fileno())
 
+    # restart support: a reopened session already holds (at least)
+    # every acknowledged unit — ingest is batch-atomic, so skipping
+    # whole units by their closing time resumes the stream exactly
+    t_done = session.live._t_append_last
     for i, unit in enumerate(proposal_units()):
+        if unit[-1].t <= t_done:
+            continue
         session.ingest(unit)
         ack(f"unit {i} {unit[-1].t}")
         if (i + 1) % SWAP_EVERY == 0:
             session.flush()
             ack(f"swap {session.watermark}")
+        if sleep_s:
+            time.sleep(sleep_s)
+    if spec == "none":
+        session.flush()
+        ack(f"swap {session.watermark}")
+        session.close()
+        return 0
     return 3
 
 

@@ -1,0 +1,99 @@
+"""Deterministic replica child for the kill -9 replica chaos tests.
+
+Run as::
+
+    python tests/replica_harness.py PUBLISH_ROOT LOCAL_ROOT OUT_JSON \
+        KILL_SPEC NTH
+
+The child opens a ``ReadReplica`` of PUBLISH_ROOT mirrored at
+LOCAL_ROOT (a restart reopens the same mirror — that is the point),
+syncs until it has absorbed everything the writer published, answers
+the standard query grid at its own watermark, and writes answers +
+lifetime stats to OUT_JSON (atomically), exiting 0.
+
+Kill specs make the death genuine (SIGKILL from inside, never an
+exception path):
+
+* ``none``          — run to completion.
+* ``after_sync``    — die right after the NTH successful sync: the
+  mirror is a complete checkpoint; the restart must rejoin by
+  manifest *diff* alone (``segments_reused`` counts its old files).
+* ``mid_sync``      — die inside sync NTH, after segment files hit
+  the mirror but BEFORE the local manifest rename: the mirror must
+  still be a valid (older) store root on restart.
+
+Exit codes: 0 done, 3 the kill spec never fired.
+"""
+import json
+import os
+import signal
+import sys
+
+
+def _kill():
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def main(argv) -> int:
+    publish_root, local_root, out_json = argv[0], argv[1], argv[2]
+    spec = argv[3] if len(argv) > 3 else "none"
+    nth = int(argv[4]) if len(argv) > 4 else 1
+
+    import numpy as np
+
+    from repro.persist import manifest as mf
+    from repro.replica import LocalDirTransport, ReadReplica
+
+    replica = ReadReplica(LocalDirTransport(publish_root), local_root,
+                          name="child", seed=5)
+    if spec == "mid_sync":
+        # fire between the mirrored WAL write and the local manifest
+        # rename of the NTH sync: counts manifest writes into the
+        # local root only
+        orig = mf.write_manifest
+        state = {"n": 0}
+
+        def hooked(root, manifest):
+            if os.path.abspath(root) == os.path.abspath(local_root):
+                state["n"] += 1
+                if state["n"] == nth:
+                    _kill()
+            return orig(root, manifest)
+
+        mf.write_manifest = hooked
+
+    # sync until the mirror has caught the publish root's watermark
+    target = None
+    for _ in range(2000):
+        pub = mf.read_manifest(publish_root)
+        if pub is not None:
+            target = int(pub["t_sealed"])
+        try:
+            replica.sync()
+        except Exception:
+            continue
+        if spec == "after_sync" and replica.stats.syncs >= nth:
+            _kill()
+        if target is not None and replica.watermark >= target:
+            break
+
+    from test_persist import _grid
+    qs = _grid(1, max(replica.watermark, 1))
+    answers = [[float(x) for x in np.atleast_1d(a)]
+               for a in replica.evaluate_many(qs)]
+    payload = {
+        "watermark": replica.watermark,
+        "answers": answers,
+        "stats": replica.status()["stats"],
+    }
+    tmp = out_json + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, out_json)
+    return 0 if spec == "none" else 3    # a kill spec must have fired
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

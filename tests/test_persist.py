@@ -231,8 +231,237 @@ def test_verify_detects_segment_corruption(tmp_path):
     bad = {c: np.zeros(2, np.int32) for c in ("op", "u", "v", "slot", "t")}
     from repro.persist import save_segment_file
     save_segment_file(seg_file, bad)
-    with pytest.raises(ValueError, match="manifest entry"):
+    # the content CRC (always enforced on the read path) trips before
+    # verify's row-count cross-check ever runs
+    with pytest.raises(ValueError, match="crc32 mismatch"):
         open_store(root, verify=True)
+    with pytest.raises(ValueError, match="crc32 mismatch"):
+        open_store(root)                 # caught without verify= too
+
+
+def test_segment_crc_catches_bitflip_on_mmap_read(tmp_path):
+    """A single flipped byte inside a sealed segment's data region is
+    caught by the manifest CRC32 stamp on the default (mmap) read path
+    — no ``verify=True`` needed, silently wrong history is never
+    served."""
+    from repro.persist.manifest import (SegmentCorruptError,
+                                        segment_file_crc)
+    root = str(tmp_path / "g")
+    store = open_store(root, n_cap=16, segment_min_ops=1).store
+    store.ingest([Op(ADD_NODE, i, i, i + 1) for i in range(6)])
+    store.advance_to(6)
+    store.seal_tail(6)
+    store.close()
+    entry = read_manifest(root)["segments"][0]
+    seg_file = os.path.join(root, entry["file"])
+    assert segment_file_crc(seg_file) == entry["crc32"]
+    size = os.path.getsize(seg_file)
+    with open(seg_file, "r+b") as fh:    # flip one byte past the header
+        fh.seek(size - 3)
+        b = fh.read(1)
+        fh.seek(size - 3)
+        fh.write(bytes([b[0] ^ 0x10]))
+    assert segment_file_crc(seg_file) != entry["crc32"]
+    with pytest.raises(SegmentCorruptError, match="crc32 mismatch"):
+        open_store(root)
+    with pytest.raises(SegmentCorruptError):
+        open_store(root, readonly=True)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive torn-tail fuzz: truncations and bit flips
+# ---------------------------------------------------------------------------
+
+
+def _fuzz_wal_bytes(tmp_path) -> bytes:
+    """A WAL holding one record of every type (realistic shapes)."""
+    path = str(tmp_path / "fuzz.log")
+    wal = WriteAheadLog(path)
+    cols = {c: np.arange(3, dtype=np.int32)
+            for c in ("op", "u", "v", "slot", "t")}
+    wal.append(walmod.encode_tail(2, 1, 1, cols))
+    ops = [Op(ADD_NODE, 0, 0, 3), Op(ADD_NODE, 1, 1, 3),
+           Op(ADD_EDGE, 0, 1, 3)]
+    wal.log_ops(ops)
+    wal.log_pending(ops[:1])
+    wal.log_advance(3)
+    wal.log_seal(3, 6, False)
+    wal.log_drain(1, 4)
+    wal.close()
+    with open(path, "rb") as fh:
+        return fh.read()
+
+
+def _frame_spans(buf: bytes) -> list[tuple[int, int]]:
+    """(start, end) byte span of every intact frame, in order."""
+    spans, off = [], len(walmod.MAGIC)
+    for _payload, end in walmod.iter_frames(buf):
+        spans.append((off, end))
+        off = end
+    return spans
+
+
+def test_wal_truncation_fuzz_every_byte(tmp_path):
+    """Replay of a log truncated at EVERY byte offset yields exactly
+    the records whose frames fit whole below the cut — the exact-prefix
+    contract a crash at an arbitrary write boundary relies on."""
+    buf = _fuzz_wal_bytes(tmp_path)
+    spans = _frame_spans(buf)
+    assert len(spans) == 6               # one frame per record type
+    whole = [bytes(p) for p, _ in walmod.iter_frames(buf)]
+    for cut in range(len(buf) + 1):
+        payloads, valid = walmod.scan_bytes(buf[:cut])
+        n_fit = sum(1 for _s, e in spans if e <= cut)
+        assert [bytes(p) for p in payloads] == whole[:n_fit], cut
+        if n_fit:
+            assert valid == spans[n_fit - 1][1]
+        else:
+            # nothing intact: the valid offset is just past the magic
+            # (or 0 when even the magic is cut short)
+            assert valid == (len(walmod.MAGIC)
+                             if cut >= len(walmod.MAGIC) else 0), cut
+        # every surviving payload still decodes
+        for p in payloads:
+            walmod.decode(p)
+
+
+def test_wal_bitflip_fuzz_every_frame_region(tmp_path):
+    """One flipped byte in any region of frame k — length field, CRC
+    field, first/middle/last payload byte — terminates replay exactly
+    at frame k: everything before survives verbatim, nothing at or past
+    the flip is ever returned."""
+    buf = _fuzz_wal_bytes(tmp_path)
+    spans = _frame_spans(buf)
+    whole = [bytes(p) for p, _ in walmod.iter_frames(buf)]
+    hsz = walmod._HEADER.size
+    for k, (start, end) in enumerate(spans):
+        body = start + hsz
+        regions = {"len_lo": start, "len_hi": start + 3,
+                   "crc_lo": start + 4, "crc_hi": start + 7,
+                   "payload_first": body,
+                   "payload_mid": (body + end - 1) // 2,
+                   "payload_last": end - 1}
+        for label, pos in regions.items():
+            for mask in (0x01, 0x80):
+                mut = bytearray(buf)
+                mut[pos] ^= mask
+                payloads, valid = walmod.scan_bytes(bytes(mut))
+                assert [bytes(p) for p in payloads] == whole[:k], \
+                    (k, label, mask)
+                assert valid == (spans[k - 1][1] if k else
+                                 len(walmod.MAGIC)), (k, label, mask)
+    # a mangled magic makes the whole buffer inert, not misread
+    mut = bytearray(buf)
+    mut[0] ^= 0x01
+    assert walmod.scan_bytes(bytes(mut)) == ([], 0)
+
+
+def test_store_recovers_exact_prefix_at_every_wal_cut(tmp_path):
+    """Store-level torn-tail sweep: truncate a live root's WAL at every
+    frame boundary (plus a mid-frame cut per frame) and reopen.  Every
+    cut at or past the base record must recover a store whose history
+    is an exact prefix — bit-identical to the full-stream oracle at
+    every t ≤ its recovered t_cur; cuts inside the base record must
+    refuse loudly (torn base), never come up with partial state."""
+    import shutil
+    root = str(tmp_path / "g")
+    units = harness.proposal_units()
+    store = open_store(root, n_cap=harness.N_CAP, segment_min_ops=8).store
+    for unit in units[:5]:
+        store.ingest(unit)
+        store.advance_to(unit[-1].t)
+    store.flush()                        # rotation: WAL = base + suffix
+    for unit in units[5:8]:
+        store.ingest(unit)
+        store.advance_to(unit[-1].t)
+    # ... process dies here (no close): the WAL is all that is new
+    wal_rel = wal_name(read_manifest(root)["wal_seq"])
+    with open(os.path.join(root, wal_rel), "rb") as fh:
+        buf = fh.read()
+    spans = _frame_spans(buf)
+    assert len(spans) >= 5               # base + the streamed suffix
+    oracle = _oracle("dense")
+    t_full = store.t_cur
+
+    cuts = [len(walmod.MAGIC)]           # magic only: no base record
+    cuts += [(s + e) // 2 for s, e in spans]     # torn mid-frame
+    cuts += [e for _s, e in spans]       # every frame boundary
+    t_seen = -1
+    for cut in sorted(set(cuts)):
+        work = str(tmp_path / f"cut_{cut}")
+        shutil.copytree(root, work)
+        with open(os.path.join(work, wal_rel), "r+b") as fh:
+            fh.truncate(cut)
+        if cut < spans[0][1]:            # base record torn
+            with pytest.raises(RuntimeError, match="torn base"):
+                open_store(work)
+            continue
+        got = open_store(work).store
+        assert got.t_cur <= t_full
+        assert got.t_cur >= t_seen       # longer prefix, never regress
+        t_seen = got.t_cur
+        if got.t_cur >= 1:
+            qs = _grid(1, got.t_cur)
+            _assert_bitequal(got.evaluate_many(qs),
+                             oracle.evaluate_many(qs), ctx=f"cut={cut}")
+        got.close()
+    assert t_seen == t_full              # the full cut IS the live state
+
+
+# ---------------------------------------------------------------------------
+# Offline integrity checker (scripts/fsck_graph.py)
+# ---------------------------------------------------------------------------
+
+
+FSCK = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                    "fsck_graph.py")
+
+
+def _fsck(root, *flags):
+    return subprocess.run([sys.executable, FSCK, str(root), *flags],
+                          env=_child_env(), capture_output=True,
+                          text=True, timeout=300)
+
+
+def test_fsck_clean_corrupt_and_torn(tmp_path):
+    root = str(tmp_path / "g")
+    store = open_store(root, n_cap=harness.N_CAP, segment_min_ops=8).store
+    units = harness.proposal_units()
+    for unit in units[:6]:
+        store.ingest(unit)
+        store.advance_to(unit[-1].t)
+    store.seal_tail(store.t_cur)         # at least one sealed segment
+    store.flush()
+    for unit in units[6:8]:
+        store.ingest(unit)
+        store.advance_to(unit[-1].t)
+
+    r = _fsck(root, "--deep")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "deep recovery ok" in r.stdout
+
+    # a torn WAL tail is crash residue: reported, never an error
+    wal_path = os.path.join(root, wal_name(read_manifest(root)["wal_seq"]))
+    with open(wal_path, "ab") as fh:
+        fh.write(b"\x20\x00\x00\x00partial")
+    r = _fsck(root)
+    assert r.returncode == 0 and "torn tail" in r.stdout
+
+    # segment corruption: per-file FAIL line + nonzero exit
+    entry = read_manifest(root)["segments"][0]
+    seg_path = os.path.join(root, entry["file"])
+    with open(seg_path, "r+b") as fh:
+        fh.seek(os.path.getsize(seg_path) - 5)
+        b = fh.read(1)
+        fh.seek(os.path.getsize(seg_path) - 5)
+        fh.write(bytes([b[0] ^ 0x04]))
+    r = _fsck(root)
+    assert r.returncode == 1
+    assert f"FAIL  {entry['file']}" in r.stdout
+    assert "crc32 mismatch" in r.stdout
+
+    # not a store root at all
+    assert _fsck(str(tmp_path / "nowhere")).returncode == 2
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,632 @@
+"""Replication layer (repro/replica): segment shipping, read replicas,
+watermark routing — hardened under injected faults and real kill -9.
+
+The acceptance contract (ISSUE 8): every query a replica answers
+bit-matches a from-scratch oracle at the answering replica's
+watermark, under dropped/delayed/torn/bit-flipped fetches, under
+kill -9 of replicas, and under kill -9 of the writer; killed replicas
+rejoin by manifest-diff catch-up alone (never re-shipping history
+they already hold).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import persist_harness as harness
+from test_persist import _assert_bitequal, _child_env, _grid, _oracle
+from repro.core import Query
+from repro.replica import (FaultInjector, FaultRule, FaultyTransport,
+                           InjectedFault, LocalDirTransport, QueryRouter,
+                           ReadReplica, ReplicaDown, ReplicaSyncError,
+                           SegmentPublisher, TransportError)
+from repro.serving.frontend import OverloadError
+from repro.serving.ingest import WatermarkError
+
+W_HARNESS = os.path.join(os.path.dirname(__file__), "persist_harness.py")
+R_HARNESS = os.path.join(os.path.dirname(__file__), "replica_harness.py")
+
+
+def _stream_writer(tmp_path, *, units=None, swap_every=harness.SWAP_EVERY):
+    """In-process durable writer + publisher over the fixed stream."""
+    from repro.api import GraphSession
+    s = GraphSession.open(str(tmp_path / "writer"), n_cap=harness.N_CAP,
+                          segment_min_ops=harness.SEGMENT_MIN_OPS)
+    pub = s.publish_to(str(tmp_path / "pub"))
+    for i, unit in enumerate(units if units is not None
+                             else harness.proposal_units()):
+        s.ingest(unit)
+        if (i + 1) % swap_every == 0:
+            s.flush()
+    s.flush()
+    return s, pub
+
+
+def _check_replica_exact(replica, oracle) -> None:
+    w = replica.watermark
+    assert w >= 1
+    qs = _grid(1, w)
+    _assert_bitequal(replica.evaluate_many(qs), oracle.evaluate_many(qs),
+                     ctx=f"replica@{w}")
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_schedules():
+    inj = FaultInjector(seed=3)
+    inj.add("p", "raise", nth=2)
+    inj.check("p")                       # 1st: clean
+    with pytest.raises(InjectedFault):
+        inj.check("p")                   # 2nd: fires
+    inj.check("p")                       # one-shot: consumed
+    assert inj.fired == [("p", "raise", 2)]
+
+    inj.add("q", "drop", at=(7, 9))
+    inj.check("q", value=5)
+    with pytest.raises(TransportError):
+        inj.check("q", value=7)
+    with pytest.raises(TransportError):
+        inj.check("q", value=9)
+    inj.check("q", value=7)              # each value one-shot
+
+    inj.add("r", "eio", every=3)
+    hits = 0
+    for _ in range(9):
+        try:
+            inj.check("r")
+        except OSError:
+            hits += 1
+    assert hits == 3
+
+
+def test_fault_injector_corruptions_deterministic():
+    data = bytes(range(64))
+    a = FaultInjector(seed=11)
+    a.add("f", "bit_flip", every=1)
+    b = FaultInjector(seed=11)
+    b.add("f", "bit_flip", every=1)
+    flips_a = [a.corrupt("f", data) for _ in range(5)]
+    flips_b = [b.corrupt("f", data) for _ in range(5)]
+    assert flips_a == flips_b            # seeded: schedules replay
+    assert all(f != data and len(f) == len(data) for f in flips_a)
+
+    torn = FaultInjector()
+    torn.add("f", "torn", every=1, frac=0.25)
+    assert torn.corrupt("f", data) == data[:16]
+
+    slow = FaultInjector()
+    slow.add("f", "delay", every=1, delay_s=5.0)
+    t0 = time.perf_counter()
+    with pytest.raises(TransportError, match="timeout"):
+        slow.corrupt("f", data, timeout=0.01)
+    assert time.perf_counter() - t0 < 1.0  # slept the timeout, not 5s
+
+
+# ---------------------------------------------------------------------------
+# shipping
+# ---------------------------------------------------------------------------
+
+
+def test_publisher_ships_manifest_diff(tmp_path):
+    s, pub = _stream_writer(tmp_path)
+    n_segments = len(s.store._segments)
+    assert n_segments >= 2
+    # each sealed segment crossed the wire exactly once
+    assert sum(r.segments_shipped for r in pub.history) == n_segments
+    assert pub.publish().segments_shipped == 0   # no change: no re-ship
+    # the publish root is itself a valid store root at the watermark
+    from repro.persist import open_store
+    rec = open_store(str(tmp_path / "pub"), readonly=True)
+    assert rec.store.t_cur == s.store.t_cur
+    s.close()
+
+    # a restarted writer's publisher resumes the diff, not the history
+    pub2 = SegmentPublisher(str(tmp_path / "writer"), str(tmp_path / "pub"))
+    assert pub2.publish().segments_shipped == 0
+
+
+def test_local_transport_missing_file(tmp_path):
+    t = LocalDirTransport(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        t.fetch("nope.bin")
+
+
+# ---------------------------------------------------------------------------
+# replica sync under faults
+# ---------------------------------------------------------------------------
+
+
+def test_replica_bitexact_and_incremental(tmp_path):
+    from repro.api import GraphSession
+    s = GraphSession.open(str(tmp_path / "writer"), n_cap=harness.N_CAP,
+                          segment_min_ops=harness.SEGMENT_MIN_OPS)
+    pub = s.publish_to(str(tmp_path / "pub"))
+    replica = ReadReplica(pub.transport(), str(tmp_path / "rep"))
+    oracle = _oracle("dense")
+
+    for i, unit in enumerate(harness.proposal_units()):
+        s.ingest(unit)
+        if (i + 1) % harness.SWAP_EVERY == 0:
+            s.flush()
+            replica.sync()
+            assert replica.watermark == s.watermark
+            _check_replica_exact(replica, oracle)
+    s.flush()
+    rec = replica.sync()
+    assert rec["mode"] in ("incremental", "rotate")
+    _check_replica_exact(replica, oracle)
+    assert replica.stats.full_rebuilds == 0
+    # steady state: syncing with no writer activity moves nothing
+    assert replica.sync()["mode"] == "noop"
+    s.close()
+
+
+def test_replica_sync_under_random_faults(tmp_path):
+    """Drops, delays, torn transfers and bit flips on every fetch —
+    the sync loop must converge and stay bit-exact regardless."""
+    s, pub = _stream_writer(tmp_path)
+    inj = FaultInjector(seed=23)
+    inj.add("fetch", "drop", prob=0.25)
+    inj.add("fetch", "torn", prob=0.2, frac=0.3)
+    inj.add("fetch", "bit_flip", prob=0.2)
+    replica = ReadReplica(FaultyTransport(pub.transport(), inj),
+                          str(tmp_path / "rep"), seed=7,
+                          backoff_base=0.001, backoff_max=0.01,
+                          max_retries=10)
+    for _ in range(20):                  # keep trying through the noise
+        try:
+            replica.sync()
+        except ReplicaSyncError:
+            continue
+        if replica.watermark >= s.watermark:
+            break
+    assert replica.watermark == s.watermark
+    assert inj.fired                     # the schedule actually bit
+    _check_replica_exact(replica, _oracle("dense"))
+    s.close()
+
+
+def test_replica_quarantines_corrupt_segment(tmp_path):
+    """A bit-flipped segment payload is caught by CRC verification
+    BEFORE touching the mirror, quarantined, and re-fetched clean."""
+    s, pub = _stream_writer(tmp_path)
+    from repro.persist import manifest as mf
+    seg0 = mf.segment_name(0)             # "segments/seg_000000.npy"
+    inj = FaultInjector(seed=1)
+    inj.add(f"fetch:{seg0}", "bit_flip", nth=1, offset=200)
+    replica = ReadReplica(FaultyTransport(pub.transport(), inj),
+                          str(tmp_path / "rep"), seed=2,
+                          backoff_base=0.001)
+    replica.sync()
+    assert replica.stats.quarantined == 1
+    qdir = os.path.join(str(tmp_path / "rep"), "quarantine")
+    assert len(os.listdir(qdir)) == 1    # the corrupt payload, kept
+    assert replica.stats.segments_fetched == len(s.store._segments)
+    _check_replica_exact(replica, _oracle("dense"))
+    s.close()
+
+
+def test_replica_degrades_gracefully_then_recovers(tmp_path):
+    """Transport down: sync fails after bounded retries, the replica
+    keeps serving its old watermark; transport healed: it catches up."""
+    from repro.api import GraphSession
+    s = GraphSession.open(str(tmp_path / "writer"), n_cap=harness.N_CAP,
+                          segment_min_ops=harness.SEGMENT_MIN_OPS)
+    pub = s.publish_to(str(tmp_path / "pub"))
+    units = harness.proposal_units()
+    for unit in units[:6]:
+        s.ingest(unit)
+    s.flush()
+
+    inj = FaultInjector(seed=4)
+    replica = ReadReplica(FaultyTransport(pub.transport(), inj),
+                          str(tmp_path / "rep"), seed=3, max_retries=3,
+                          backoff_base=0.001, backoff_max=0.01)
+    replica.sync()
+    w_old = replica.watermark
+    oracle = _oracle("dense")
+    _check_replica_exact(replica, oracle)
+
+    for unit in units[6:]:               # writer moves on
+        s.ingest(unit)
+    s.flush()
+    inj.add("fetch", "drop", every=1)    # then the network dies
+    with pytest.raises(ReplicaSyncError):
+        replica.sync()
+    assert replica.watermark == w_old    # still serving, just stale
+    _check_replica_exact(replica, oracle)
+    assert replica.stats.sync_failures == 1
+    assert replica.stats.fetch_retries >= 3   # bounded backoff ran
+
+    inj.clear("fetch")                   # network heals
+    replica.sync()
+    assert replica.watermark == s.watermark
+    _check_replica_exact(replica, oracle)
+    s.close()
+
+
+def test_replica_fetch_timeout_is_bounded(tmp_path):
+    s, pub = _stream_writer(tmp_path)
+    inj = FaultInjector(seed=9)
+    inj.add("fetch", "delay", every=1, delay_s=30.0)
+    replica = ReadReplica(FaultyTransport(pub.transport(), inj),
+                          str(tmp_path / "rep"), fetch_timeout=0.01,
+                          max_retries=2, backoff_base=0.001)
+    t0 = time.perf_counter()
+    with pytest.raises(ReplicaSyncError):
+        replica.sync()
+    assert time.perf_counter() - t0 < 5.0   # never waits out the 30s
+    s.close()
+
+
+def test_replica_restart_resumes_from_mirror(tmp_path):
+    """A replica restarted from its mirror serves immediately (no
+    transport) and then rejoins by diff."""
+    s, pub = _stream_writer(tmp_path)
+    rep_root = str(tmp_path / "rep")
+    r1 = ReadReplica(pub.transport(), rep_root)
+    r1.sync()
+    w = r1.watermark
+    fetched = r1.stats.segments_fetched
+    assert fetched >= 2
+    del r1
+
+    class _DeadTransport:
+        def fetch(self, relpath, *, timeout=None):
+            raise TransportError("source down")
+
+    r2 = ReadReplica(_DeadTransport(), rep_root)   # writer unreachable
+    assert r2.watermark == w             # serving from the mirror alone
+    _check_replica_exact(r2, _oracle("dense"))
+
+    r3 = ReadReplica(pub.transport(), rep_root, name="rejoin")
+    assert r3.sync()["mode"] == "noop"    # mirror already current
+    assert r3.stats.segments_fetched == 0          # diff-only rejoin
+    assert r3.stats.full_rebuilds == 0
+    assert r3.watermark == w
+    _check_replica_exact(r3, _oracle("dense"))
+    s.close()
+
+
+def test_replica_hot_anchor_budget(tmp_path):
+    """anchor_budget_bytes turns on replica-local materialization:
+    anchors follow the replica's own traffic, under its own budget."""
+    s, pub = _stream_writer(tmp_path)
+    from repro.core.engine import _snapshot_bytes
+    per = _snapshot_bytes(s.store.current)
+    replica = ReadReplica(pub.transport(), str(tmp_path / "rep"),
+                          anchor_budget_bytes=2 * per,
+                          anchor_min_gap_ops=8)
+    replica.sync()
+    hot_t = max(2, replica.watermark // 2)
+    qs = [Query("point", "global", "num_edges", t_k=hot_t)] * 50
+    replica.evaluate_many(qs)            # histogram fills at hot_t
+    replica.refresh_anchors()            # rebalance to local traffic
+    anchors = list(replica.store.materialized.times)
+    assert hot_t in anchors              # the hot time got its anchor
+    assert len(anchors) <= 2             # never over local budget
+    _check_replica_exact(replica, _oracle("dense"))
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+class _StubReplica:
+    def __init__(self, name, watermark, answer=1.0):
+        self.name = name
+        self.watermark = watermark
+        self.answer = answer
+        self.dead = False
+        self.inflight = 0
+        self.calls = 0
+
+    def status(self):
+        if self.dead:
+            raise ConnectionError("dead")
+        return {"name": self.name, "watermark": self.watermark,
+                "inflight": self.inflight}
+
+    def evaluate_many(self, queries, plan="auto", **kw):
+        if self.dead:
+            raise ConnectionError("dead")
+        self.calls += 1
+        return [self.answer] * len(queries)
+
+
+def _q(t):
+    return Query("point", "global", "num_edges", t_k=t)
+
+
+def test_router_watermark_routing_and_failover():
+    fresh = _StubReplica("fresh", watermark=20, answer=2.0)
+    stale = _StubReplica("stale", watermark=10, answer=1.0)
+    router = QueryRouter(heartbeat_timeout=60.0)
+    router.register("fresh", fresh)
+    router.register("stale", stale)
+
+    # only the fresh replica covers t=15
+    assert router.evaluate_many([_q(15)]) == [2.0]
+    assert fresh.calls == 1 and stale.calls == 0
+    # nobody covers t=25
+    with pytest.raises(WatermarkError):
+        router.evaluate_many([_q(25)])
+    # fresh dies: routing t=15 to it fails over, but no one else
+    # covers — the call surfaces WatermarkError and fresh is marked
+    # down for everything after
+    fresh.dead = True
+    with pytest.raises(WatermarkError):
+        router.evaluate_many([_q(15)])
+    assert router.failovers == 1
+    assert not [r for r in router.replicas()
+                if r["name"] == "fresh"][0]["alive"]
+    # t<=10 keeps flowing to the stale survivor
+    assert router.evaluate_many([_q(9)]) == [1.0]
+    # fresh restarts: the next heartbeat readmits it, no re-registration
+    fresh.dead = False
+    assert router.heartbeat() == {"fresh": True, "stale": True}
+    assert router.evaluate_many([_q(15)]) == [2.0]
+    # everything dead -> ReplicaDown
+    fresh.dead = stale.dead = True
+    router.heartbeat()
+    with pytest.raises(ReplicaDown):
+        router.evaluate_many([_q(5)])
+
+
+def test_router_sheds_on_overload():
+    r = _StubReplica("r", watermark=10)
+    router = QueryRouter(max_inflight=2, heartbeat_timeout=60.0)
+    router.register("r", r)
+    r.inflight = 2                       # saturated (heartbeat view)
+    router.heartbeat()
+    with pytest.raises(OverloadError):
+        router.evaluate_many([_q(5)])
+    assert router.shed == 1
+    r.inflight = 0
+    router.heartbeat()
+    assert router.evaluate_many([_q(5)]) == [1.0]
+
+
+def test_router_over_live_replicas_bitexact(tmp_path):
+    """Router + two real replicas at different watermarks: every
+    answered query bit-matches the oracle at the ANSWERING replica's
+    watermark (the acceptance clause)."""
+    from repro.api import GraphSession
+    s = GraphSession.open(str(tmp_path / "writer"), n_cap=harness.N_CAP,
+                          segment_min_ops=harness.SEGMENT_MIN_OPS)
+    pub = s.publish_to(str(tmp_path / "pub"))
+    units = harness.proposal_units()
+    for unit in units[:6]:
+        s.ingest(unit)
+    s.flush()
+    r_stale = ReadReplica(pub.transport(), str(tmp_path / "r0"), name="r0")
+    r_stale.sync()
+    for unit in units[6:]:
+        s.ingest(unit)
+    s.flush()
+    r_fresh = ReadReplica(pub.transport(), str(tmp_path / "r1"), name="r1")
+    r_fresh.sync()
+    assert r_stale.watermark < r_fresh.watermark
+
+    router = GraphSession.open_router({"r0": r_stale, "r1": r_fresh})
+    oracle = _oracle("dense")
+    for t in range(1, r_fresh.watermark + 1):
+        got = router.evaluate_many([_q(t)])
+        ref = oracle.evaluate_many([_q(t)])
+        _assert_bitequal(got, ref, ctx=f"routed t={t}")
+    # the stale replica served what it covers (load spreading happened)
+    assert r_stale.stats.queries_served > 0
+    assert r_fresh.stats.queries_served > 0
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# kill -9: replicas and the writer
+# ---------------------------------------------------------------------------
+
+
+def _run_replica_child(pub_root, rep_root, out, spec, nth, expect_kill):
+    proc = subprocess.run(
+        [sys.executable, R_HARNESS, pub_root, rep_root, out, spec,
+         str(nth)],
+        env=_child_env(), capture_output=True, text=True, timeout=600)
+    if expect_kill:
+        assert proc.returncode == -signal.SIGKILL, \
+            (spec, proc.returncode, proc.stderr[-2000:])
+    else:
+        assert proc.returncode == 0, \
+            (spec, proc.returncode, proc.stderr[-2000:])
+        with open(out) as fh:
+            return json.load(fh)
+
+
+@pytest.mark.parametrize("spec,nth", [("after_sync", 1), ("mid_sync", 1)],
+                         ids=["after-sync", "mid-sync"])
+def test_kill9_replica_rejoins_by_diff(tmp_path, spec, nth):
+    """kill -9 a replica (post-sync or mid-sync), publish more epochs,
+    restart it: the rejoin fetches only the new segments and the final
+    answers bit-match the oracle."""
+    from repro.api import GraphSession
+    s = GraphSession.open(str(tmp_path / "writer"), n_cap=harness.N_CAP,
+                          segment_min_ops=harness.SEGMENT_MIN_OPS)
+    pub_root = str(tmp_path / "pub")
+    s.publish_to(pub_root)
+    units = harness.proposal_units()
+    for unit in units[:6]:
+        s.ingest(unit)
+    s.flush()
+    n_seg_half = len(s.store._segments)
+
+    rep_root, out = str(tmp_path / "rep"), str(tmp_path / "out.json")
+    _run_replica_child(pub_root, rep_root, out, spec, nth,
+                       expect_kill=True)
+
+    for unit in units[6:]:               # writer moves on past the death
+        s.ingest(unit)
+    s.flush()
+    n_seg_full = len(s.store._segments)
+    assert n_seg_full > n_seg_half
+
+    payload = _run_replica_child(pub_root, rep_root, out, "none", 0,
+                                 expect_kill=False)
+    assert payload["watermark"] == s.watermark
+    oracle = _oracle("dense")
+    qs = _grid(1, payload["watermark"])
+    ref = [[float(x) for x in np.atleast_1d(a)]
+           for a in oracle.evaluate_many(qs)]
+    assert payload["answers"] == ref
+    # rejoin by manifest diff ALONE: everything mirrored before the
+    # kill is reused, only post-death segments cross the wire
+    stats = payload["stats"]
+    assert stats["full_rebuilds"] == 0
+    if spec == "after_sync":
+        assert stats["segments_reused"] >= n_seg_half
+        assert stats["segments_fetched"] == n_seg_full - n_seg_half
+    else:                                # mid-sync death: no manifest
+        assert stats["segments_reused"] >= 1   # yet files were kept
+    s.close()
+
+
+def _spawn_writer(writer_root, pub_root, ms_per_unit=20):
+    return subprocess.Popen(
+        [sys.executable, W_HARNESS, writer_root, "dense", "none",
+         str(ms_per_unit), pub_root],
+        env=_child_env(), stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL)
+
+
+def _wait_for_watermark(pub_root, t_min, timeout=300):
+    from repro.persist import read_manifest
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        m = read_manifest(pub_root)
+        if m is not None and m["t_sealed"] >= t_min:
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"publish root never reached t={t_min}")
+
+
+def test_kill9_writer_replica_keeps_serving(tmp_path):
+    """kill -9 the WRITER mid-stream: the replica keeps serving its
+    watermark exactly; the restarted writer recovers, resumes
+    publishing, and the replica catches up to the full stream."""
+    writer_root = str(tmp_path / "writer")
+    pub_root = str(tmp_path / "pub")
+    final_t = harness.proposal_units()[-1][-1].t
+
+    proc = _spawn_writer(writer_root, pub_root)
+    try:
+        _wait_for_watermark(pub_root, 3)
+        proc.send_signal(signal.SIGKILL)   # a real, uncatchable death
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    replica = ReadReplica(LocalDirTransport(pub_root),
+                          str(tmp_path / "rep"))
+    replica.sync()
+    w_dead = replica.watermark
+    assert w_dead >= 3
+    oracle = _oracle("dense")
+    _check_replica_exact(replica, oracle)  # exact while the writer is dead
+    replica.sync()                         # and syncing is a clean no-op
+
+    proc = _spawn_writer(writer_root, pub_root, ms_per_unit=0)
+    try:
+        assert proc.wait(timeout=300) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    for _ in range(10):
+        replica.sync()
+        if replica.watermark >= final_t:
+            break
+    assert replica.watermark == final_t
+    assert replica.watermark > w_dead
+    _check_replica_exact(replica, oracle)
+    assert replica.stats.full_rebuilds == 0   # diff catch-up, even here
+
+
+def test_chaos_writer_kill_faulty_fetch_routed_queries(tmp_path):
+    """The full chaos drill: a live writer child streams and publishes,
+    two replicas poll through a fault-injecting transport, a router
+    serves a query load the whole time, the writer is kill -9'd and
+    restarted mid-run.  EVERY answered query must bit-match the
+    from-scratch oracle (history <= any watermark is immutable, so the
+    oracle is time-invariant) and the fleet must converge to the full
+    stream."""
+    writer_root = str(tmp_path / "writer")
+    pub_root = str(tmp_path / "pub")
+    final_t = harness.proposal_units()[-1][-1].t
+    oracle = _oracle("dense")
+    ref = {t: oracle.evaluate_many([_q(t)])[0] for t in range(1, final_t + 1)}
+
+    replicas = []
+    for i in range(2):
+        inj = FaultInjector(seed=31 + i)
+        inj.add("fetch", "drop", prob=0.1)
+        inj.add("fetch", "bit_flip", prob=0.1)
+        replicas.append(ReadReplica(
+            FaultyTransport(LocalDirTransport(pub_root), inj),
+            str(tmp_path / f"rep{i}"), name=f"r{i}", seed=i,
+            backoff_base=0.001, backoff_max=0.01, max_retries=8))
+    router = QueryRouter(heartbeat_timeout=60.0)
+    for r in replicas:
+        router.register(r.name, r)
+
+    answered = 0
+    proc = _spawn_writer(writer_root, pub_root)
+    try:
+        _wait_for_watermark(pub_root, 3)
+        killed = False
+        deadline = time.monotonic() + 300
+        while time.monotonic() < deadline:
+            for r in replicas:
+                try:
+                    r.sync()
+                except ReplicaSyncError:
+                    pass                 # injected noise; keep serving
+            router.heartbeat()
+            top = max(r.watermark for r in replicas)
+            if top >= 1:                 # probe the full served range
+                for t in range(1, top + 1):
+                    got = router.evaluate_many([_q(t)])[0]
+                    assert np.array_equal(np.asarray(got),
+                                          np.asarray(ref[t])), t
+                    answered += 1
+            if not killed and top >= 3:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait(timeout=60)
+                proc = _spawn_writer(writer_root, pub_root, ms_per_unit=0)
+                killed = True
+            if killed and proc.poll() == 0 and top >= final_t:
+                break
+        assert killed
+        assert proc.wait(timeout=300) == 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    for r in replicas:
+        for _ in range(10):
+            try:
+                r.sync()
+            except ReplicaSyncError:
+                continue
+            if r.watermark >= final_t:
+                break
+        assert r.watermark == final_t
+        _check_replica_exact(r, oracle)
+    assert answered > 0
+    assert router.queries_routed == answered

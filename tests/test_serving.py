@@ -7,6 +7,8 @@ at ``t ≤ t_served`` bit-matches the same query on a from-scratch store
 built from the full op log, across layouts (the multi-device variant
 lives in tests/test_distributed.py).
 """
+import time
+
 import numpy as np
 import pytest
 
@@ -14,8 +16,9 @@ from repro.core import Op, Query, TemporalGraphStore
 from repro.core.delta import ADD_EDGE, ADD_NODE, REM_EDGE, REM_NODE
 from repro.core.generate import EvolutionParams, generate_ops
 from repro.serving import (LiveGraphStore, MicroBatchFrontend,
-                           PeriodicMaterializationPolicy, WatermarkError,
-                           WorkloadMaterializationPolicy, WorkloadStats)
+                           OverloadError, PeriodicMaterializationPolicy,
+                           WatermarkError, WorkloadMaterializationPolicy,
+                           WorkloadStats)
 
 N_CAP = 64
 
@@ -394,6 +397,103 @@ def test_frontend_surfaces_watermark_errors():
     fe.flush()
     with pytest.raises(WatermarkError):
         fut.result(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# Frontend backpressure
+# ---------------------------------------------------------------------------
+
+
+def _distinct_queries(live, n):
+    tc = live.t_served
+    return [Query("point", "node", "degree", t_k=1 + i % tc, v=i)
+            for i in range(n)]
+
+
+def test_frontend_overload_raises_at_max_pending():
+    live = _live_small()
+    fe = MicroBatchFrontend(live, max_batch=64, max_pending=3)
+    qs = _distinct_queries(live, 4)
+    futs = [fe.submit(q) for q in qs[:3]]
+    # the 4th submit finds the queue at its bound: explicit rejection,
+    # nothing enqueued, nothing already queued disturbed
+    with pytest.raises(OverloadError):
+        fe.submit(qs[3])
+    assert fe.stats.rejected == 1 and fe.stats.max_pending_seen == 3
+    fe.flush()
+    assert all(f.done() for f in futs)
+    # space freed: the same query is admitted now
+    fut = fe.submit(qs[3])
+    fe.flush()
+    assert fut.result(timeout=5) is not None
+    assert fe.stats.rejected == 1
+
+
+def test_frontend_overload_raise_cache_hit_is_never_rejected():
+    live = _live_small()
+    fe = MicroBatchFrontend(live, max_batch=64, max_pending=2)
+    q = Query("point", "global", "num_edges", t_k=live.t_served)
+    fe.serve([q])                        # warm the exact cache
+    for fill in _distinct_queries(live, 2):
+        fe.submit(fill)                  # saturate the queue
+    # a hit resolves from the cache without touching the queue
+    assert fe.submit(q).result(timeout=1) is not None
+    assert fe.stats.rejected == 0
+    fe.flush()
+
+
+def test_frontend_overload_block_paces_producers():
+    import threading as th
+    live = _live_small()
+    fe = MicroBatchFrontend(live, max_batch=2, max_delay_ms=1.0,
+                            max_pending=2, overload="block").start()
+    try:
+        qs = _distinct_queries(live, 8)
+        futs = []
+        done = th.Event()
+
+        def producer():
+            for q in qs:                 # blocks whenever queue is full
+                futs.append(fe.submit(q))
+            done.set()
+
+        th.Thread(target=producer, daemon=True).start()
+        assert done.wait(timeout=30)     # drain thread kept it moving
+        for f in futs:
+            f.result(timeout=30)
+        assert fe.stats.rejected == 0
+        assert fe.stats.max_pending_seen <= 2   # the bound really held
+        assert fe.stats.served == len(qs)
+    finally:
+        fe.stop()
+
+
+def test_frontend_sheds_aged_requests_at_dispatch():
+    live = _live_small()
+    fe = MicroBatchFrontend(live, max_batch=64, shed_after_ms=5.0)
+    qs = _distinct_queries(live, 3)
+    stale_fut = fe.submit(qs[0])
+    time.sleep(0.03)                     # ages past shed_after_ms
+    fresh_futs = [fe.submit(q) for q in qs[1:]]
+    fe.flush()
+    with pytest.raises(OverloadError):
+        stale_fut.result(timeout=5)
+    for f in fresh_futs:                 # fresh ones still served
+        assert f.result(timeout=5) is not None
+    assert fe.stats.shed == 1
+    assert fe.stats.served == 2
+
+
+def test_frontend_shed_entire_batch_returns_progress():
+    live = _live_small()
+    fe = MicroBatchFrontend(live, max_batch=64, shed_after_ms=1.0)
+    futs = [fe.submit(q) for q in _distinct_queries(live, 3)]
+    time.sleep(0.02)
+    assert fe.flush() == 3               # progress counted, not looped
+    for f in futs:
+        with pytest.raises(OverloadError):
+            f.result(timeout=5)
+    assert fe.stats.shed == 3 and fe.stats.served == 0
 
 
 # ---------------------------------------------------------------------------
