@@ -1,0 +1,198 @@
+"""graphtop — a `top`-style live terminal view of repro metrics.
+
+Two sources:
+
+* ``--file metrics.json`` — poll a JSON snapshot some serving process
+  rewrites periodically (``json.dump(session.metrics(), fh)``); rates
+  are derived from successive counter deltas.
+* ``--demo`` — self-contained: spins up a tiny in-process serve loop
+  (ingest + queries against a ``GraphSession``) and renders its live
+  registry.  Good for eyeballing the metric catalog without any setup.
+
+``--once`` prints a single frame and exits (CI-friendly, also what the
+obs smoke uses); ``--frames N`` stops after N frames.  Rendering is
+plain ANSI — clear screen, aligned columns — nothing to install.
+
+Usage:
+    python scripts/graphtop.py --demo
+    python scripts/graphtop.py --file /tmp/metrics.json --interval 2
+    python scripts/graphtop.py --demo --once
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _fmt(v: float) -> str:
+    """Human scale: 1234567 -> 1.2M, 0.00042 -> 420u."""
+    if v == 0:
+        return "0"
+    for cut, suf in ((1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(v) >= cut:
+            return f"{v / cut:.1f}{suf}"
+    if abs(v) >= 1:
+        return f"{v:.0f}" if float(v).is_integer() else f"{v:.2f}"
+    for cut, suf in ((1e-3, "m"), (1e-6, "u"), (1e-9, "n")):
+        if abs(v) >= cut:
+            return f"{v / cut:.0f}{suf}"
+    return f"{v:.2g}"
+
+
+def _hist_quantile(state: dict, q: float) -> float:
+    """Quantile from a snapshot's cumulative-free bucket list
+    ``[[upper_bound, count], ..., ["+Inf", count]]`` (upper-bound
+    estimate, same rule as the live ``_Histogram.quantile``)."""
+    total = state.get("count", 0)
+    if total == 0:
+        return 0.0
+    need = q * total
+    run = 0
+    buckets = state["buckets"]
+    for bound, n in buckets:
+        run += n
+        if run >= need:
+            return state["max"] if bound == "+Inf" else float(bound)
+    return state["max"]
+
+
+def render(snap: dict, prev: dict | None, dt: float) -> str:
+    """One frame: counters (+ per-second rates vs the previous frame),
+    gauges, histogram p50/p95/max."""
+    lines = []
+    lines.append(f"graphtop — {time.strftime('%H:%M:%S')}   "
+                 f"(interval {dt:.1f}s)")
+    counters = snap.get("counters", {})
+    if counters:
+        lines.append("")
+        lines.append(f"  {'COUNTER':<44}{'TOTAL':>10}{'RATE/s':>10}")
+        prev_c = (prev or {}).get("counters", {})
+        for name in sorted(counters):
+            for key in sorted(counters[name]):
+                cur = counters[name][key]
+                old = prev_c.get(name, {}).get(key, None)
+                rate = ("" if old is None or dt <= 0
+                        else _fmt((cur - old) / dt))
+                label = f"{name}{{{key}}}" if key else name
+                lines.append(f"  {label:<44}{_fmt(cur):>10}{rate:>10}")
+    gauges = snap.get("gauges", {})
+    if gauges:
+        lines.append("")
+        lines.append(f"  {'GAUGE':<44}{'VALUE':>10}")
+        for name in sorted(gauges):
+            for key in sorted(gauges[name]):
+                label = f"{name}{{{key}}}" if key else name
+                lines.append(
+                    f"  {label:<44}{_fmt(gauges[name][key]):>10}")
+    hists = snap.get("histograms", {})
+    if hists:
+        lines.append("")
+        lines.append(f"  {'HISTOGRAM':<38}{'COUNT':>8}{'P50':>8}"
+                     f"{'P95':>8}{'MAX':>8}")
+        for name in sorted(hists):
+            for key in sorted(hists[name]):
+                st = hists[name][key]
+                label = f"{name}{{{key}}}" if key else name
+                lines.append(
+                    f"  {label:<38}{_fmt(st.get('count', 0)):>8}"
+                    f"{_fmt(_hist_quantile(st, 0.50)):>8}"
+                    f"{_fmt(_hist_quantile(st, 0.95)):>8}"
+                    f"{_fmt(st.get('max', 0)):>8}")
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------------ demo source
+
+class _DemoSource:
+    """A live GraphSession doing real work so every frame moves."""
+
+    def __init__(self):
+        import numpy as np
+        from repro.api import GraphSession
+        from repro.core import ADD_EDGE, ADD_NODE, Query
+
+        self.session = GraphSession(n_cap=64)
+        self.rng = np.random.default_rng(0)
+        self.Query = Query
+        self.ADD_EDGE = ADD_EDGE
+        self.t = 16
+        # seed some nodes so edge ops land on live endpoints
+        self.session.ingest([(ADD_NODE, v, v, v + 1) for v in range(16)])
+        self.session.flush()
+
+    def step(self):
+        u, v = (int(x) for x in self.rng.integers(0, 16, size=2))
+        if u != v:
+            self.t += 1
+            self.session.ingest([(self.ADD_EDGE, u, v, self.t)])
+        self.session.flush()
+        wm = self.session.watermark
+        qs = [self.Query(kind="point", scope="node", measure="degree",
+                         t_k=max(wm - k, 0), v=u) for k in range(4)]
+        self.session.query_many(qs)
+
+    def snapshot(self) -> dict:
+        return self.session.metrics()
+
+    def close(self):
+        self.session.close()
+
+
+class _FileSource:
+    def __init__(self, path: str):
+        self.path = path
+
+    def step(self):
+        pass
+
+    def snapshot(self) -> dict:
+        with open(self.path) as fh:
+            return json.load(fh)
+
+    def close(self):
+        pass
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--file", help="poll this JSON metrics snapshot")
+    ap.add_argument("--demo", action="store_true",
+                    help="self-contained in-process serve loop")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="seconds between frames (default 1.0)")
+    ap.add_argument("--once", action="store_true",
+                    help="print one frame and exit")
+    ap.add_argument("--frames", type=int, default=0,
+                    help="stop after N frames (0 = until interrupted)")
+    args = ap.parse_args(argv)
+    if bool(args.file) == bool(args.demo):
+        ap.error("pick exactly one of --file or --demo")
+
+    src = _FileSource(args.file) if args.file else _DemoSource()
+    frames = 1 if args.once else args.frames
+    prev = None
+    n = 0
+    try:
+        while True:
+            src.step()
+            snap = src.snapshot()
+            frame = render(snap, prev, args.interval)
+            if not args.once and sys.stdout.isatty():
+                sys.stdout.write("\x1b[2J\x1b[H")
+            print(frame, flush=True)
+            prev = snap
+            n += 1
+            if frames and n >= frames:
+                break
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        src.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

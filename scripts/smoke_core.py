@@ -79,3 +79,9 @@ smoke_engine.main()
 # frontend cache — parity vs a from-scratch store at every watermark)
 import smoke_serving  # noqa: E402  (same scripts/ directory)
 smoke_serving.main()
+
+# observability gate (metrics registry, Prometheus export, Chrome
+# trace with nested query spans, WAL/swap timing — all from one
+# real serve loop)
+import smoke_obs  # noqa: E402  (same scripts/ directory)
+smoke_obs.main()

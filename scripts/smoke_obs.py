@@ -1,0 +1,132 @@
+"""Observability smoke: the unified metrics/tracing layer end to end.
+
+Drives a real serve loop (durable session: WAL + checkpoint + swaps +
+batched queries) with tracing on, then checks the three surfaces the
+layer promises:
+
+* ``session.metrics()`` — key series exist and moved (queries counted,
+  WAL fsyncs timed, every swap phase observed);
+* ``metrics_text()`` — the Prometheus exposition round-trips through a
+  minimal parser (HELP/TYPE/sample-line shape);
+* ``dump_trace()`` — the Chrome trace contains the query spans (plan /
+  dispatch) time-nested inside their parent ``query`` span.
+
+Run directly or via ``scripts/smoke_core.py``.
+"""
+import json
+import os
+import tempfile
+
+
+def main() -> None:
+    import numpy as np
+
+    from repro.api import GraphSession
+    from repro.core import ADD_EDGE, ADD_NODE, Query
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import NULL_SPAN, trace_span, uninstall_tracer
+
+    uninstall_tracer()           # pristine slot regardless of caller
+    assert trace_span("off") is NULL_SPAN, "disabled tracing must no-op"
+
+    rng = np.random.default_rng(7)
+    reg = MetricsRegistry()      # private registry: counts are exact
+    with tempfile.TemporaryDirectory() as root:
+        with GraphSession(path=os.path.join(root, "g"), n_cap=64,
+                          metrics=reg) as sess:
+            tracer = sess.enable_tracing()
+            sess.ingest([(ADD_NODE, v, v, v + 1) for v in range(32)])
+            sess.flush()
+            t = 32
+            for _ in range(8):
+                for _ in range(4):
+                    u, v = (int(x) for x in rng.integers(0, 32, size=2))
+                    if u != v:
+                        t += 1
+                        sess.ingest([(ADD_EDGE, u, v, t)])
+                sess.flush()
+                qs = [Query(kind="point", scope="node", measure="degree",
+                            t_k=int(rng.integers(1, sess.watermark + 1)),
+                            v=int(rng.integers(0, 32)))
+                      for _ in range(16)]
+                sess.query_many(qs)
+
+            snap = sess.metrics()
+            for name in ("engine_queries_total", "frontend_served_total",
+                         "serving_swaps_total", "wal_appends_total"):
+                vals = snap["counters"].get(name, {})
+                assert sum(vals.values()) > 0, f"{name} never moved: {vals}"
+            fsync = snap["histograms"].get("wal_fsync_seconds", {})
+            assert any(st["count"] > 0 for st in fsync.values()), \
+                "wal_fsync_seconds never observed"
+            phases = snap["histograms"].get("serving_swap_phase_seconds",
+                                            {})
+            for ph in ("drain", "ingest", "rebalance", "seal",
+                       "checkpoint", "flip", "publish"):
+                key = f"phase={ph}"
+                assert phases.get(key, {}).get("count", 0) > 0, \
+                    f"swap phase {ph!r} never observed: {sorted(phases)}"
+
+            text = sess.metrics_text()
+            _check_prometheus(text)
+
+            trace_path = os.path.join(root, "trace.json")
+            sess.dump_trace(trace_path)
+            _check_trace(json.load(open(trace_path)))
+            sess.disable_tracing()
+        assert trace_span("off") is NULL_SPAN
+        del tracer
+    print("obs smoke OK")
+
+
+def _check_prometheus(text: str) -> None:
+    """Minimal exposition-format parse: every non-comment line is
+    ``name{labels} value`` with a float value; HELP/TYPE precede data."""
+    seen_type: set[str] = set()
+    samples = 0
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            if line.startswith("# TYPE "):
+                seen_type.add(line.split()[2])
+            continue
+        assert not line.startswith("#"), f"unknown comment: {line!r}"
+        name_part, _, value = line.rpartition(" ")
+        float(value)             # raises if malformed
+        base = name_part.split("{", 1)[0]
+        for suf in ("_bucket", "_sum", "_count"):
+            if base.endswith(suf) and base[:-len(suf)] in seen_type:
+                base = base[:-len(suf)]
+                break
+        assert base in seen_type, f"sample before TYPE: {line!r}"
+        samples += 1
+    assert samples > 10, f"suspiciously small exposition: {samples}"
+
+
+def _check_trace(trace: dict) -> None:
+    """The acceptance shape: plan + dispatch spans nested (by time
+    containment, same tid) inside a ``query`` span."""
+    events = trace["traceEvents"]
+    assert events, "empty trace"
+    queries = [e for e in events if e["name"] == "query"]
+    assert queries, "no query spans recorded"
+
+    def inside(child, parent):
+        return (child["tid"] == parent["tid"]
+                and child["ts"] >= parent["ts"]
+                and child["ts"] + child["dur"]
+                    <= parent["ts"] + parent["dur"] + 1e-3)
+
+    for want in ("plan", "dispatch"):
+        kids = [e for e in events if e["name"] == want]
+        assert kids, f"no {want!r} spans recorded"
+        assert any(inside(k, q) for k in kids for q in queries), \
+            f"{want!r} spans never nest inside a query span"
+    # swap instrumentation rode along too
+    assert any(e["name"] == "wal.append" for e in events)
+    assert any(e["name"] == "swap" for e in events)
+
+
+if __name__ == "__main__":
+    main()

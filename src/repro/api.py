@@ -46,6 +46,9 @@ import numpy as np
 
 from repro.core.plans import Query
 from repro.core.store import Op, TemporalGraphStore
+from repro.obs.metrics import default_registry
+from repro.obs.trace import (Tracer, active_tracer, install_tracer,
+                             uninstall_tracer)
 from repro.serving.frontend import MicroBatchFrontend
 from repro.serving.ingest import LiveGraphStore, SwapRecord, WatermarkError
 
@@ -74,8 +77,18 @@ class GraphSession:
                  max_pending: int | None = None, overload: str = "raise",
                  shed_after_ms: float | None = None,
                  segment_min_ops: int | None = None,
-                 segment_device_budget: int | None = None, **live_kw):
+                 segment_device_budget: int | None = None,
+                 metrics=None, slow_query_ms: float | None = 250.0,
+                 **live_kw):
         self.path = path
+        # The session's metrics registry: the process-global default
+        # unless the caller passes an isolated one.  Everything below
+        # (WAL, swaps, engine, frontend) accounts into it; leaf
+        # registries (frontend) chain onto it.  ``session.metrics()``
+        # snapshots it.
+        self._metrics = (default_registry() if metrics is None
+                         else metrics)
+        self._tracer: Tracer | None = None
         pending: list[Op] = []
         if path is not None:
             from repro.persist import open_store
@@ -84,7 +97,8 @@ class GraphSession:
             # core MaterializationPolicy and stays unset.
             rec = open_store(path, n_cap=n_cap, e_cap=e_cap, layout=layout,
                              fsync=fsync, segment_min_ops=segment_min_ops,
-                             segment_device_budget=segment_device_budget)
+                             segment_device_budget=segment_device_budget,
+                             metrics=self._metrics)
             store, pending = rec.store, rec.pending
         else:
             if n_cap is None:
@@ -96,12 +110,13 @@ class GraphSession:
                 n_cap, e_cap=e_cap, layout=layout or "dense",
                 segment_device_budget=segment_device_budget, **store_kw)
         self.live = LiveGraphStore(store=store, policy=policy, mesh=mesh,
-                                   pending=pending, **live_kw)
+                                   pending=pending, metrics=self._metrics,
+                                   slow_query_ms=slow_query_ms, **live_kw)
         self.frontend = MicroBatchFrontend(
             self.live, max_batch=max_batch, max_delay_ms=max_delay_ms,
             cache_entries=cache_entries, stale=stale,
             max_pending=max_pending, overload=overload,
-            shed_after_ms=shed_after_ms)
+            shed_after_ms=shed_after_ms, metrics=self._metrics)
         self._publisher = None
         self._closed = False
 
@@ -220,11 +235,62 @@ class GraphSession:
         return self.store.snapshot_at(t)
 
     def stats(self) -> dict:
-        """Store + serving counters (ingest lag, epoch, cache rates)."""
+        """Store + serving counters (ingest lag, epoch, cache rates).
+        A thin compat view — ``metrics()`` is the full surface."""
         return {**self.store.stats(), **self.live.ingest_lag(),
                 "watermark": self.watermark,
                 "cache_hits": self.frontend.stats.cache_hits,
                 "cache_misses": self.frontend.stats.cache_misses}
+
+    # -------------------------------------------------------- observability
+
+    def metrics(self) -> dict:
+        """JSON snapshot of the session's metrics registry: WAL fsync
+        latency, swap phase durations, engine dispatch counters,
+        frontend cache traffic, replica lag (when replicas/routers
+        share the registry — the default), ...  See README
+        "Observability" for the catalog."""
+        return self._metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the same registry."""
+        return self._metrics.render_prometheus()
+
+    @property
+    def metrics_registry(self):
+        return self._metrics
+
+    def enable_tracing(self, capacity: int = 16384) -> Tracer:
+        """Install a process-wide span tracer (bounded ring).  One
+        query then records plan → anchor-select → window-delta →
+        dispatch → measure; one swap records drain → WAL append/fsync
+        → seal → checkpoint → flip → publish."""
+        if self._tracer is None:
+            self._tracer = install_tracer(Tracer(capacity=capacity))
+        return self._tracer
+
+    def disable_tracing(self) -> None:
+        """Uninstall this session's tracer (keeps recorded events for
+        a later ``dump_trace``)."""
+        if self._tracer is not None:
+            uninstall_tracer(self._tracer)
+
+    def dump_trace(self, path: str) -> str:
+        """Write the recorded spans as Chrome ``trace_event`` JSON —
+        load in ``chrome://tracing`` or Perfetto."""
+        tracer = self._tracer or active_tracer()
+        if tracer is None:
+            raise ValueError("tracing was never enabled "
+                             "(call enable_tracing() first)")
+        return tracer.dump(path)
+
+    def slow_queries(self) -> list[dict]:
+        """Entries from the slow-query log (threshold
+        ``slow_query_ms``, default 250 ms): per-group plan/layout/
+        shard/batch attribution plus the spans recorded during the
+        call when tracing is on."""
+        log = self.live.slow_log
+        return log.entries() if log is not None else []
 
     # --------------------------------------------------------- replication
 

@@ -60,6 +60,9 @@ from repro.core.reconstruct import (degree_series, reconstruct_dense,
 # syncs); one definition shared with serving.policy.
 from repro.core.segments import (SegmentedDeltaView,
                                  window_ops_count as _window_ops_host)
+from repro.obs import clock as _clock
+from repro.obs.metrics import COUNT_BUCKETS, default_registry
+from repro.obs.trace import trace_span
 
 
 class WatermarkError(ValueError, RuntimeError):
@@ -752,6 +755,16 @@ class HistoricalQueryEngine:
         # retroactively mutate a previous call's saved stats.
         self.last_group_stats: GroupStats = GroupStats()
         self._stats_active = False
+        # Observability: registry-backed counters/histograms (the
+        # serving layer rebinds to the session registry at each freeze
+        # via ``bind_metrics``) and an optional slow-query log.  The
+        # engine-local ``cache_hits``/``cache_misses`` ints above stay
+        # as per-engine-lifetime compatibility views — every epoch swap
+        # builds a fresh engine, so they reset per epoch by
+        # construction, while the registry counters are monotonic for
+        # the registry's lifetime.
+        self.slow_log = None
+        self.bind_metrics(default_registry())
         # Serving-mode plumbing (repro.serving).  ``t_served`` is the
         # live watermark: when set, evaluate_many refuses queries past
         # it (WatermarkError) instead of silently serving a state that
@@ -874,6 +887,54 @@ class HistoricalQueryEngine:
             self._edge_anchors[anchor_id] = cached
         return cached
 
+    # -------------------------------------------------------- observability
+
+    def bind_metrics(self, registry) -> None:
+        """Resolve this engine's metric children against ``registry``
+        (``repro.obs.metrics``).  Called with the process-global
+        default at construction; the serving layer rebinds every frozen
+        epoch's engine to its session registry."""
+        self.metrics = registry
+        self._m_queries = registry.counter(
+            "engine_queries_total", "queries evaluated (batched path)")
+        self._m_calls = registry.counter(
+            "engine_calls_total", "evaluate_many invocations")
+        self._m_eval_seconds = registry.histogram(
+            "engine_evaluate_seconds",
+            "wall seconds per evaluate_many call")
+        self._m_group_batch = registry.histogram(
+            "engine_group_batch", "queries per dispatched group",
+            buckets=COUNT_BUCKETS)
+        self._m_cache_hits = registry.counter(
+            "engine_snap_cache_hits_total",
+            "reconstruction-LRU hits (LWW replay skipped)")
+        self._m_cache_misses = registry.counter(
+            "engine_snap_cache_misses_total",
+            "reconstruction-LRU misses (full LWW replay)")
+        self._m_slow = registry.counter(
+            "engine_slow_queries_total",
+            "evaluate_many calls past the slow-query threshold")
+
+    def _slow_entry(self, queries, seconds: float, trace_seq) -> dict:
+        """Full plan attribution for one slow call (lazy — only built
+        when the threshold triggered)."""
+        from repro.obs.trace import active_tracer
+        entry = {
+            "n_queries": len(queries),
+            "cache_hits": self.last_group_stats.cache_hits,
+            "cache_misses": self.last_group_stats.cache_misses,
+            "groups": [
+                {"plan": k.plan, "kind": k.kind, "measure": k.measure,
+                 "layout": k.layout, "anchor_id": k.anchor_id,
+                 "indexed": k.indexed, "windowed": k.windowed,
+                 "partial": k.partial, "batch": b, "shard_mode": mode}
+                for k, b, mode in self.last_group_stats],
+        }
+        tracer = active_tracer()
+        if tracer is not None and trace_seq is not None:
+            entry["spans"] = tracer.events_since(trace_seq)
+        return entry
+
     # ------------------------------------------- reconstruction cache
 
     def reconstruct_cached(self, anchor_id: int, t: int,
@@ -886,24 +947,30 @@ class HistoricalQueryEngine:
         if g is not None:
             self._snap_cache.move_to_end(key)
             self.cache_hits += 1
+            self._m_cache_hits.inc()
             if self._stats_active:
                 self.last_group_stats.cache_hits += 1
             return g
         self.cache_misses += 1
+        self._m_cache_misses.inc()
         if self._stats_active:
             self.last_group_stats.cache_misses += 1
-        if layout == "edge":
-            t_a, g_a = self.edge_anchor(anchor_id)
-        else:
-            t_a, g_a = self.selector.get(anchor_id)
-        # single-window LWW reconstruction masks exactly at the window
-        # bounds, so the merged-delta tree may cover the whole window
-        d = (self.view.window_delta(min(t_a, t), max(t_a, t), merged=True)
-             if self.view is not None else self.delta)
-        if layout == "edge":
-            g = reconstruct_edge(g_a, d, t_a, t)
-        else:
-            g = reconstruct_dense(g_a, d, t_a, t)
+        with trace_span("reconstruct", anchor=int(anchor_id), t=int(t),
+                        layout=layout):
+            if layout == "edge":
+                t_a, g_a = self.edge_anchor(anchor_id)
+            else:
+                t_a, g_a = self.selector.get(anchor_id)
+            # single-window LWW reconstruction masks exactly at the
+            # window bounds, so the merged-delta tree may cover the
+            # whole window
+            d = (self.view.window_delta(min(t_a, t), max(t_a, t),
+                                        merged=True)
+                 if self.view is not None else self.delta)
+            if layout == "edge":
+                g = reconstruct_edge(g_a, d, t_a, t)
+            else:
+                g = reconstruct_dense(g_a, d, t_a, t)
         if self.snap_cache_cap > 0:
             self._snap_cache[key] = g
             self._snap_cache_total += _snapshot_bytes(g)
@@ -1099,6 +1166,14 @@ class HistoricalQueryEngine:
         else:
             padded = _pow2(b_floor)
         self.last_group_stats.append((key, b, mode))
+        # per-group accounting: plan/layout/shard-mode labels come from
+        # closed vocabularies (bounded label cardinality); batch size
+        # goes to a histogram, not a label
+        self.metrics.counter(
+            "engine_groups_total", "device programs dispatched",
+            plan=key.plan, layout=key.layout,
+            shard=mode or "none").inc()
+        self._m_group_batch.observe(b)
         pad = padded - b
         tks = np.asarray([q.t_k for q in qs] + [qs[-1].t_k] * pad,
                          np.int32)
@@ -1135,8 +1210,11 @@ class HistoricalQueryEngine:
         # segments); two-phase groups window separately below.
         base_cur = (self.current_edge if key.layout == "edge"
                     else self.current)
-        dlt = (self._plan_delta(key, tks, tls, b)
-               if key.plan in ("delta_only", "hybrid") else None)
+        if key.plan in ("delta_only", "hybrid"):
+            with trace_span("window_delta", plan=key.plan):
+                dlt = self._plan_delta(key, tks, tls, b)
+        else:
+            dlt = None
         if mode == "batch":
             cur_role = ("current_edge" if key.layout == "edge"
                         else "current")
@@ -1207,16 +1285,21 @@ class HistoricalQueryEngine:
                              self.t_cur),
                             (0, 0, 1, 1, 1, 0, 0))
         else:  # two_phase
-            if key.layout == "edge":
-                t_anchor, g_anchor = self.edge_anchor(key.anchor_id)
-            else:
-                t_anchor, g_anchor = self.selector.get(key.anchor_id)
+            with trace_span("anchor_select", anchor=key.anchor_id,
+                            layout=key.layout):
+                if key.layout == "edge":
+                    t_anchor, g_anchor = self.edge_anchor(key.anchor_id)
+                else:
+                    t_anchor, g_anchor = self.selector.get(key.anchor_id)
             if key.kind == "evolve":
                 return self._run_evolve_group(key, b, mode, mesh, t_anchor,
                                               g_anchor, tks, tls, vs_d)
-            d = self._group_delta(
-                key, t_anchor,
-                np.concatenate([tks, tls]) if key.kind != "point" else tks)
+            with trace_span("window_delta", plan="two_phase",
+                            anchor=key.anchor_id):
+                d = self._group_delta(
+                    key, t_anchor,
+                    np.concatenate([tks, tls])
+                    if key.kind != "point" else tks)
             nb = 0
             if key.kind == "agg":
                 nb = _pow2(max(int(tl - tk) + 1
@@ -1439,37 +1522,61 @@ class HistoricalQueryEngine:
                         "serving layer) to advance it")
         if self.workload is not None:
             self.workload.record_queries(queries)
-        choices = [self._resolve(q, plan, indexed, partial_rows, windowed,
-                                 layout)
-                   for q in queries]
-        groups: dict[_GroupKey, list[int]] = {}
-        for i, (q, c) in enumerate(zip(queries, choices)):
-            groups.setdefault(self._group_key(q, c), []).append(i)
-        # Dispatch every group first (async), then fetch everything with
-        # one device_get so transfers don't serialize the group programs.
-        self.last_group_stats = GroupStats()
-        self._stats_active = True
-        try:
-            outs = [(idxs,
-                     self._run_group(key, [queries[i] for i in idxs],
-                                     mesh=mesh, shard=shard))
-                    for key, idxs in groups.items()]
-        finally:
-            self._stats_active = False
-        fetched = jax.device_get([o for _, o in outs])
-        results: list = [None] * len(queries)
-        for (idxs, _), host in zip(outs, fetched):
-            arr = np.asarray(host)
-            for j, i in enumerate(idxs):
-                q = queries[i]
-                if q.kind == "evolve":
-                    # sweep rows past a query's own width repeat its
-                    # last sample (group padding) — slice them off
-                    t_l = q.t_k if q.t_l is None else q.t_l
-                    bq = (int(t_l) - q.t_k) // max(int(q.stride), 1) + 1
-                    results[i] = arr[j][:bq]
-                else:
-                    results[i] = arr[j]
+        from repro.obs.trace import active_tracer
+        tracer = active_tracer()
+        trace_seq = tracer.seq if tracer is not None else None
+        t_call = _clock.now()
+        with trace_span("query", n=len(queries)) as top:
+            with trace_span("plan", n=len(queries)):
+                choices = [self._resolve(q, plan, indexed, partial_rows,
+                                         windowed, layout)
+                           for q in queries]
+                groups: dict[_GroupKey, list[int]] = {}
+                for i, (q, c) in enumerate(zip(queries, choices)):
+                    groups.setdefault(self._group_key(q, c), []).append(i)
+            top.set(groups=len(groups))
+            # Dispatch every group first (async), then fetch everything
+            # with one device_get so transfers don't serialize the
+            # group programs.
+            self.last_group_stats = GroupStats()
+            self._stats_active = True
+            try:
+                outs = []
+                for key, idxs in groups.items():
+                    with trace_span("dispatch", plan=key.plan,
+                                    layout=key.layout,
+                                    measure=key.measure, batch=len(idxs)):
+                        outs.append(
+                            (idxs,
+                             self._run_group(key,
+                                             [queries[i] for i in idxs],
+                                             mesh=mesh, shard=shard)))
+            finally:
+                self._stats_active = False
+            with trace_span("measure", groups=len(outs)):
+                fetched = jax.device_get([o for _, o in outs])
+            results: list = [None] * len(queries)
+            for (idxs, _), host in zip(outs, fetched):
+                arr = np.asarray(host)
+                for j, i in enumerate(idxs):
+                    q = queries[i]
+                    if q.kind == "evolve":
+                        # sweep rows past a query's own width repeat
+                        # its last sample (group padding) — slice off
+                        t_l = q.t_k if q.t_l is None else q.t_l
+                        bq = (int(t_l) - q.t_k) // max(int(q.stride),
+                                                       1) + 1
+                        results[i] = arr[j][:bq]
+                    else:
+                        results[i] = arr[j]
+        seconds = _clock.now() - t_call
+        self._m_calls.inc()
+        self._m_queries.inc(len(queries))
+        self._m_eval_seconds.observe(seconds)
+        if self.slow_log is not None and self.slow_log.record(
+                seconds,
+                lambda: self._slow_entry(queries, seconds, trace_seq)):
+            self._m_slow.inc()
         if return_choices:
             return results, choices
         return results

@@ -61,6 +61,7 @@ from collections import OrderedDict
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import default_registry
 from repro.core.delta import (ADD_EDGE, NOP, REM_EDGE, T_PAD, Delta,
                               empty_delta, pow2_capacity as _pow2)
 
@@ -94,7 +95,8 @@ class Segment:
     """
 
     __slots__ = ("uid", "sealed", "op", "u", "v", "slot", "t", "n_ops",
-                 "t_min", "t_max", "_delta", "_node_counts", "_touch")
+                 "t_min", "t_max", "_delta", "_node_counts", "_touch",
+                 "_spilled")
 
     def __init__(self, op, u, v, slot, t, *, sealed: bool = True):
         self.uid = next(_UID)
@@ -110,6 +112,7 @@ class Segment:
         self.t_min = int(self.t[0])
         self.t_max = int(self.t[-1])
         self._delta: Delta | None = None
+        self._spilled = False
         self._node_counts: np.ndarray | None = None
         # creation counts as a touch: a freshly sealed (never yet
         # queried) segment must not be the residency pass's first
@@ -196,6 +199,16 @@ class Segment:
         self._touch = next(_CLOCK)
         d = self._delta
         if d is None:
+            if self._spilled:
+                # reload-on-demand after a residency spill (first-ever
+                # build is construction cost, not residency traffic)
+                reg = default_registry()
+                reg.counter("segments_reloads_total",
+                            "spilled segments rebuilt on access").inc()
+                reg.counter("segments_reload_bytes_total",
+                            "device bytes rebuilt after spills"
+                            ).inc(self.device_bytes())
+                self._spilled = False
             cap = self.capacity
             pad = cap - self.n_ops
 
@@ -212,7 +225,16 @@ class Segment:
     def spill(self) -> None:
         """Drop the device arrays (host arrays remain); the next
         ``delta`` access rebuilds them."""
+        if self._delta is None:
+            return
         self._delta = None
+        self._spilled = True
+        reg = default_registry()
+        reg.counter("segments_spills_total",
+                    "resident segments evicted to host").inc()
+        reg.counter("segments_spill_bytes_total",
+                    "device bytes released by spills"
+                    ).inc(self.device_bytes())
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"Segment(uid={self.uid}, ops={self.n_ops}, "
@@ -600,4 +622,8 @@ class SegmentedDeltaView:
                 total -= s.device_bytes()
             if spilled:
                 self._purge_windows_of(spilled)
-        return self.device_bytes()
+        resident_bytes = self.device_bytes()
+        default_registry().gauge(
+            "segments_resident_bytes",
+            "device bytes held by resident segments").set(resident_bytes)
+        return resident_bytes

@@ -40,6 +40,9 @@ from typing import Iterable
 import numpy as np
 
 from repro.core.delta import ADD_EDGE, ADD_NODE, REM_NODE
+from repro.obs import clock
+from repro.obs.metrics import default_registry
+from repro.obs.trace import trace_span
 from repro.persist import manifest as mf
 from repro.persist import wal as walmod
 from repro.persist.wal import WriteAheadLog
@@ -59,9 +62,15 @@ class Recovered:
 class StorePersistence:
     """WAL + manifest lifecycle for one durable store root."""
 
-    def __init__(self, root: str, *, fsync: bool = True):
+    def __init__(self, root: str, *, fsync: bool = True, metrics=None):
         self.root = root
         self.fsync = bool(fsync)
+        self.metrics = default_registry() if metrics is None else metrics
+        self._m_ckpt = self.metrics.counter(
+            "persist_checkpoints_total", "WAL rotations completed")
+        self._m_ckpt_s = self.metrics.histogram(
+            "persist_checkpoint_seconds",
+            "checkpoint duration (base record + manifest rename)")
         self.replaying = False
         self.closed = False
         # the epoch swap drains pending ops through ingest/advance_to;
@@ -190,23 +199,30 @@ class StorePersistence:
         ignores WAL files the manifest doesn't name."""
         if self.closed:
             return
-        next_seq = self.wal_seq + 1
-        new_wal = WriteAheadLog(self._wal_path(next_seq), fsync=self.fsync,
-                                repair=False)
-        tail = store._tail_host()
-        new_wal.append(walmod.encode_tail(
-            store.t_cur, store._ops_since_mat, store._t_last_mat, tail))
-        pending = list(pending)
-        if pending:
-            new_wal.log_pending(pending)
-        mf.write_manifest(self.root, self._manifest_dict(store, next_seq))
-        old, self.wal, self.wal_seq = self.wal, new_wal, next_seq
-        if old is not None:
-            old.close(sync=False)        # it is deleted on the next line
-            try:
-                os.remove(old.path)
-            except OSError:
-                pass
+        t0 = clock.now()
+        with trace_span("persist.checkpoint", seq=self.wal_seq + 1):
+            next_seq = self.wal_seq + 1
+            new_wal = WriteAheadLog(self._wal_path(next_seq),
+                                    fsync=self.fsync, repair=False,
+                                    metrics=self.metrics)
+            tail = store._tail_host()
+            new_wal.append(walmod.encode_tail(
+                store.t_cur, store._ops_since_mat, store._t_last_mat,
+                tail))
+            pending = list(pending)
+            if pending:
+                new_wal.log_pending(pending)
+            mf.write_manifest(self.root,
+                              self._manifest_dict(store, next_seq))
+            old, self.wal, self.wal_seq = self.wal, new_wal, next_seq
+            if old is not None:
+                old.close(sync=False)    # it is deleted on the next line
+                try:
+                    os.remove(old.path)
+                except OSError:
+                    pass
+        self._m_ckpt.inc()
+        self._m_ckpt_s.observe(clock.now() - t0)
 
     def close(self) -> None:
         if self.wal is not None:
@@ -302,7 +318,9 @@ def _replay(store, records, pending: list) -> None:
     mutation API.  Every step is deterministic given identical state
     (ingest's legality filtering included), so divergence can only
     mean a corrupted-but-CRC-valid log — fail loudly."""
+    counts: dict[int, int] = {}
     for rtype, rec in records:
+        counts[rtype] = counts.get(rtype, 0) + 1
         if rtype == walmod.REC_OPS:
             batch = _ops_from_rows(rec["rows"])
             n = store.ingest(batch)
@@ -324,6 +342,11 @@ def _replay(store, records, pending: list) -> None:
         elif rtype == walmod.REC_TAIL:
             raise RuntimeError("WAL has a base record past the first "
                                "position — rotation wrote a corrupt log")
+    reg = default_registry()
+    for rtype, n in counts.items():
+        reg.counter("persist_recovery_records_total",
+                    "WAL records replayed during recovery",
+                    type=walmod.REC_NAMES[rtype]).inc(n)
 
 
 def open_store(root: str, *, n_cap: int | None = None,
@@ -332,7 +355,7 @@ def open_store(root: str, *, n_cap: int | None = None,
                segment_device_budget: int | None = None,
                enforce_invertible: bool | None = None,
                fsync: bool = True, verify: bool = False,
-               readonly: bool = False) -> Recovered:
+               readonly: bool = False, metrics=None) -> Recovered:
     """Open (or create) a durable store root.
 
     Fresh root: builds a ``TemporalGraphStore`` from the keyword
@@ -378,9 +401,9 @@ def open_store(root: str, *, n_cap: int | None = None,
             segment_min_ops=(64 if segment_min_ops is None
                              else segment_min_ops),
             segment_device_budget=segment_device_budget)
-        persist = StorePersistence(root, fsync=fsync)
+        persist = StorePersistence(root, fsync=fsync, metrics=metrics)
         persist.wal = WriteAheadLog(persist._wal_path(1), fsync=fsync,
-                                    repair=False)
+                                    repair=False, metrics=persist.metrics)
         persist.wal.append(walmod.encode_tail(0, 0, 0, store._tail_host()))
         mf.write_manifest(root, persist._manifest_dict(store, 1))
         store.persist = persist
@@ -438,7 +461,7 @@ def open_store(root: str, *, n_cap: int | None = None,
         _replay(store, records[1:], pending)
         return Recovered(store=store, pending=pending)
 
-    persist = StorePersistence(root, fsync=fsync)
+    persist = StorePersistence(root, fsync=fsync, metrics=metrics)
     persist.wal_seq = wal_seq
     for i, entry in enumerate(manifest["segments"]):
         if entry.get("crc32") is not None:
@@ -451,6 +474,7 @@ def open_store(root: str, *, n_cap: int | None = None,
         persist.replaying = False
     # reopen the WAL for appends (truncating any torn tail the scan
     # stopped at) only now, so a failed replay never modifies the log
-    persist.wal = WriteAheadLog(wal_path, fsync=fsync, repair=True)
+    persist.wal = WriteAheadLog(wal_path, fsync=fsync, repair=True,
+                                metrics=persist.metrics)
     persist._clean_stray_wals()
     return Recovered(store=store, pending=pending)

@@ -51,6 +51,10 @@ from typing import Iterable, Iterator
 
 import numpy as np
 
+from repro.obs import clock
+from repro.obs.metrics import default_registry
+from repro.obs.trace import trace_span
+
 MAGIC = b"GDWAL001"
 _HEADER = struct.Struct("<II")          # length, crc32
 _MAX_RECORD = 1 << 30                   # sanity bound on a length field
@@ -203,10 +207,20 @@ class WriteAheadLog:
     (the default), durable before it returns."""
 
     def __init__(self, path: str, *, fsync: bool = True,
-                 repair: bool = True):
+                 repair: bool = True, metrics=None):
         self.path = path
         self.fsync = bool(fsync)
         self._lock = threading.Lock()
+        reg = default_registry() if metrics is None else metrics
+        self._m_appends = {
+            rt: reg.counter("wal_appends_total",
+                            "WAL records appended", type=name)
+            for rt, name in REC_NAMES.items()}
+        self._m_bytes = reg.counter("wal_bytes_total",
+                                    "WAL bytes written (frames incl. "
+                                    "headers)")
+        self._m_fsync = reg.histogram("wal_fsync_seconds",
+                                      "flush+fsync latency per append")
         exists = os.path.exists(path)
         if exists and repair:
             _, valid = scan(path)
@@ -222,15 +236,24 @@ class WriteAheadLog:
             self._fh.flush()
 
     def _flush(self) -> None:
+        t0 = clock.now()
         self._fh.flush()
         if self.fsync:
             os.fsync(self._fh.fileno())
+        self._m_fsync.observe(clock.now() - t0)
 
     def append(self, payload: bytes) -> None:
-        with self._lock:
-            self._fh.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
-            self._fh.write(payload)
-            self._flush()
+        with trace_span("wal.append", type=REC_NAMES.get(payload[0]),
+                        bytes=len(payload)):
+            with self._lock:
+                self._fh.write(_HEADER.pack(len(payload),
+                                            zlib.crc32(payload)))
+                self._fh.write(payload)
+                self._flush()
+            m = self._m_appends.get(payload[0])
+            if m is not None:
+                m.inc()
+            self._m_bytes.inc(_HEADER.size + len(payload))
 
     def sync(self) -> None:
         with self._lock:

@@ -51,6 +51,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.engine import WatermarkError
+from repro.obs import clock
+from repro.obs.metrics import (MetricsRegistry, NullRegistry,
+                               default_registry)
+from repro.obs.trace import trace_span
 from repro.persist import manifest as mf
 from repro.persist import wal as walmod
 from repro.persist.recovery import _ops_from_rows, _replay, open_store
@@ -73,22 +77,72 @@ class _RestartSync(Exception):
     vanished under us) — refetch the manifest and go again."""
 
 
-@dataclasses.dataclass
 class ReplicaStats:
-    """Lifetime counters for one replica (``status()`` exports them)."""
+    """Lifetime counters for one replica (``status()`` exports them).
 
-    syncs: int = 0
-    sync_failures: int = 0
-    segments_fetched: int = 0
-    segments_reused: int = 0
-    bytes_fetched: int = 0
-    records_applied: int = 0
-    full_rebuilds: int = 0
-    quarantined: int = 0
-    fetch_retries: int = 0
-    queries_served: int = 0
-    last_sync_seconds: float = 0.0
-    last_error: str = ""
+    A read-only view over the replica's leaf metrics registry — reads
+    like ``replica.stats.syncs`` resolve live registry children, and
+    the replica mutates through ``inc`` (an atomic child increment,
+    never read-modify-write).  Per-instance counts start at zero per
+    replica because each replica owns a fresh leaf registry; the same
+    increments aggregate into the parent registry.
+    """
+
+    _COUNTERS = {
+        "syncs": ("replica_syncs_total", "successful sync passes"),
+        "sync_failures": ("replica_sync_failures_total",
+                          "sync passes that exhausted retries"),
+        "segments_fetched": ("replica_segments_fetched_total",
+                             "segment files shipped over transport"),
+        "segments_reused": ("replica_segments_reused_total",
+                            "segment fetches skipped (mirror intact)"),
+        "bytes_fetched": ("replica_bytes_fetched_total",
+                          "artifact bytes pulled over transport"),
+        "records_applied": ("replica_records_applied_total",
+                            "WAL records applied to the mirror"),
+        "full_rebuilds": ("replica_full_rebuilds_total",
+                          "incremental applies that fell back to a "
+                          "full readonly rebuild"),
+        "quarantined": ("replica_quarantined_total",
+                        "corrupt payloads quarantined"),
+        "fetch_retries": ("replica_fetch_retries_total",
+                          "artifact fetches retried"),
+        "queries_served": ("replica_queries_served_total",
+                           "queries answered by this replica"),
+    }
+
+    def __init__(self, registry):
+        children = {}
+        for attr, (name, help_) in self._COUNTERS.items():
+            children[attr] = registry.counter(name, help_)
+        self._children = children
+        self._last_sync = registry.gauge(
+            "replica_last_sync_seconds",
+            "duration of the last completed sync pass")
+        self.last_error = ""
+
+    def inc(self, attr: str, n: int = 1) -> None:
+        self._children[attr].inc(n)
+
+    def __getattr__(self, name):
+        children = self.__dict__.get("_children")
+        if children is not None and name in children:
+            return children[name].value
+        raise AttributeError(name)
+
+    @property
+    def last_sync_seconds(self) -> float:
+        return self._last_sync.value
+
+    @last_sync_seconds.setter
+    def last_sync_seconds(self, v: float) -> None:
+        self._last_sync.set(float(v))
+
+    def asdict(self) -> dict:
+        out = {attr: c.value for attr, c in self._children.items()}
+        out["last_sync_seconds"] = self.last_sync_seconds
+        out["last_error"] = self.last_error
+        return out
 
 
 class ReadReplica:
@@ -115,7 +169,7 @@ class ReadReplica:
                  anchor_budget_bytes: int | None = None,
                  anchor_min_gap_ops: int = 128,
                  mesh=None, indexed: bool = False, node_cap: int = 1024,
-                 seed: int = 0):
+                 seed: int = 0, metrics=None):
         self.transport = transport
         self.root = local_root
         self.name = name
@@ -126,7 +180,22 @@ class ReadReplica:
         self.mesh = mesh
         self.indexed = indexed
         self.node_cap = int(node_cap)
-        self.stats = ReplicaStats()
+        # per-instance leaf registry chained onto the session/process
+        # parent (see obs.metrics module docstring)
+        parent = default_registry() if metrics is None else metrics
+        self.metrics = (parent if isinstance(parent, NullRegistry)
+                        else MetricsRegistry(parent=parent))
+        self.stats = ReplicaStats(self.metrics)
+        self._m_outcome = {
+            mode: self.metrics.counter("replica_sync_outcome_total",
+                                       "sync passes by apply mode",
+                                       mode=mode)
+            for mode in ("initial", "rebuild", "incremental", "rotate",
+                         "noop")}
+        self._m_sync_s = self.metrics.histogram(
+            "replica_sync_seconds", "sync pass duration")
+        self._m_watermark = self.metrics.gauge(
+            "replica_watermark", "this replica's exactness frontier")
         self._rng = random.Random(seed)
         os.makedirs(os.path.join(local_root, mf.SEGMENT_DIR), exist_ok=True)
         os.makedirs(os.path.join(local_root, QUARANTINE_DIR), exist_ok=True)
@@ -177,13 +246,13 @@ class ReadReplica:
             try:
                 data = self.transport.fetch(relpath,
                                             timeout=self.fetch_timeout)
-                self.stats.bytes_fetched += len(data)
+                self.stats.inc("bytes_fetched", len(data))
                 return data
             except FileNotFoundError:
                 raise
             except (InjectedFault, OSError, TimeoutError) as exc:
                 last = exc
-                self.stats.fetch_retries += 1
+                self.stats.inc("fetch_retries")
                 time.sleep(self._backoff(attempt))
         raise ReplicaSyncError(
             f"{self.name}: fetch of {relpath!r} failed after "
@@ -195,7 +264,7 @@ class ReadReplica:
         n = self.stats.quarantined
         with open(os.path.join(qdir, f"{base}.{n:04d}"), "wb") as fh:
             fh.write(data)
-        self.stats.quarantined += 1
+        self.stats.inc("quarantined")
 
     def _fetch_segment(self, entry: dict) -> None:
         """Fetch + CRC-verify one sealed segment into the mirror.  A
@@ -212,7 +281,7 @@ class ReadReplica:
                 continue
             mf.atomic_write_bytes(os.path.join(self.root, rel), data)
             self._seg_ok.add(rel)
-            self.stats.segments_fetched += 1
+            self.stats.inc("segments_fetched")
             return
         raise ReplicaSyncError(
             f"{self.name}: segment {rel!r} still corrupt after "
@@ -222,7 +291,7 @@ class ReadReplica:
         """Diff step: ship nothing the mirror already holds intact."""
         rel = entry["file"]
         if rel in self._seg_ok:
-            self.stats.segments_reused += 1
+            self.stats.inc("segments_reused")
             return
         path = os.path.join(self.root, rel)
         if os.path.exists(path):
@@ -230,14 +299,14 @@ class ReadReplica:
                 crc = entry.get("crc32")
                 if crc is None or mf.segment_file_crc(path) == int(crc):
                     self._seg_ok.add(rel)
-                    self.stats.segments_reused += 1
+                    self.stats.inc("segments_reused")
                     return
             except Exception:
                 pass                      # unreadable local file: refetch
             os.replace(path, os.path.join(
                 self.root, QUARANTINE_DIR,
                 os.path.basename(rel) + f".{self.stats.quarantined:04d}"))
-            self.stats.quarantined += 1
+            self.stats.inc("quarantined")
         self._fetch_segment(entry)
 
     def _read_local_wal(self) -> bytes:
@@ -254,8 +323,9 @@ class ReadReplica:
         """One full sync pass: manifest diff -> segments -> WAL ->
         local manifest -> apply.  Raises ``ReplicaSyncError`` on
         exhaustion (the poll loop catches it; direct callers decide)."""
-        with self._sync_lock:
-            t0 = time.perf_counter()
+        with self._sync_lock, trace_span("replica.sync",
+                                         replica=self.name) as sp:
+            t0 = clock.now()
             try:
                 for _ in range(4):        # writer may rotate under us
                     try:
@@ -267,7 +337,7 @@ class ReadReplica:
                     raise ReplicaSyncError(
                         f"{self.name}: writer kept rotating mid-sync")
             except Exception as exc:
-                self.stats.sync_failures += 1
+                self.stats.inc("sync_failures")
                 self.stats.last_error = f"{type(exc).__name__}: {exc}"
                 if isinstance(exc, ReplicaSyncError):
                     raise
@@ -277,10 +347,17 @@ class ReadReplica:
                 raise ReplicaSyncError(
                     f"{self.name}: sync failed: "
                     f"{type(exc).__name__}: {exc}") from exc
-            self.stats.syncs += 1
-            self.stats.last_sync_seconds = time.perf_counter() - t0
+            self.stats.inc("syncs")
+            seconds = clock.now() - t0
+            self.stats.last_sync_seconds = seconds
+            self._m_sync_s.observe(seconds)
+            outcome = self._m_outcome.get(rec.get("mode"))
+            if outcome is not None:
+                outcome.inc()
+            sp.set(mode=rec.get("mode"),
+                   applied=rec.get("records_applied"))
             self.stats.last_error = ""
-            rec["seconds"] = self.stats.last_sync_seconds
+            rec["seconds"] = seconds
             return rec
 
     def _fetch_manifest(self) -> dict:
@@ -294,7 +371,7 @@ class ReadReplica:
                 return json.loads(raw)
             except ValueError as exc:
                 last = exc
-                self.stats.fetch_retries += 1
+                self.stats.inc("fetch_retries")
                 time.sleep(self._backoff(attempt))
         raise ReplicaSyncError(
             f"{self.name}: manifest unparseable after "
@@ -375,7 +452,8 @@ class ReadReplica:
             self._wal_seq = int(manifest["wal_seq"])
             self._wal_off = off
             self._engine = eng
-        self.stats.records_applied += applied
+        self.stats.inc("records_applied", applied)
+        self._m_watermark.set(int(store.t_cur))
         return self._rec(mode, applied)
 
     def _apply_rebuild(self, manifest: dict, walbuf: bytes,
@@ -387,7 +465,7 @@ class ReadReplica:
         for entry in manifest["segments"]:
             self._seg_ok.add(entry["file"])
         if not initial:
-            self.stats.full_rebuilds += 1
+            self.stats.inc("full_rebuilds")
         n = max(len(list(walmod.iter_frames(walbuf))) - 1, 0)
         return self._finish_apply(manifest, walbuf, rec.store, rec.pending,
                                   "initial" if initial else "rebuild", n)
@@ -545,7 +623,7 @@ class ReadReplica:
                     f"{self.name}: {len(late)} queries past replica "
                     f"watermark t={w}")
             out = eng.evaluate_many(queries, plan, **kw)
-            self.stats.queries_served += len(queries)
+            self.stats.inc("queries_served", len(queries))
             return out
         finally:
             with self._lock:
@@ -585,7 +663,7 @@ class ReadReplica:
             "wal_seq": self._wal_seq,
             "inflight": self._inflight,
             "pending_ops": len(self._pending),
-            "stats": dataclasses.asdict(self.stats),
+            "stats": self.stats.asdict(),
         }
 
 

@@ -23,6 +23,8 @@ import time
 from typing import Sequence
 
 from repro.core.engine import WatermarkError
+from repro.obs.metrics import default_registry
+from repro.obs.trace import trace_span
 from repro.serving.frontend import OverloadError
 
 __all__ = ["QueryRouter", "ReplicaDown", "ReplicaHealth",
@@ -37,7 +39,7 @@ class ReplicaHealth:
     """Router-side view of one replica: last heartbeat, freshness,
     load, and the error that took it down (if any)."""
 
-    def __init__(self, name: str, target):
+    def __init__(self, name: str, target, registry=None):
         self.name = name
         self.target = target
         self.alive = True
@@ -47,6 +49,14 @@ class ReplicaHealth:
         self.last_error = ""
         self.queries_routed = 0
         self.failures = 0
+        reg = default_registry() if registry is None else registry
+        self._g_inflight = reg.gauge("router_inflight",
+                                     "router-tracked in-flight batches",
+                                     replica=name)
+        self._g_lag = reg.gauge(
+            "router_replica_lag",
+            "staleness behind the freshest known watermark",
+            replica=name)
 
     def snapshot(self) -> dict:
         return {"name": self.name, "alive": self.alive,
@@ -74,9 +84,18 @@ class QueryRouter:
     """
 
     def __init__(self, *, max_inflight: int = 64,
-                 heartbeat_timeout: float = 2.0):
+                 heartbeat_timeout: float = 2.0, metrics=None):
         self.max_inflight = int(max_inflight)
         self.heartbeat_timeout = float(heartbeat_timeout)
+        self.metrics = default_registry() if metrics is None else metrics
+        self._m_queries = self.metrics.counter(
+            "router_queries_total", "queries routed to a replica")
+        self._m_failovers = self.metrics.counter(
+            "router_failovers_total",
+            "mid-call failovers to the next candidate")
+        self._m_shed = self.metrics.counter(
+            "router_shed_total",
+            "batches shed: every covering replica saturated")
         self._replicas: dict[str, ReplicaHealth] = {}
         self._lock = threading.RLock()
         self._hb_thread: threading.Thread | None = None
@@ -89,7 +108,7 @@ class QueryRouter:
 
     def register(self, name: str, target) -> None:
         with self._lock:
-            h = ReplicaHealth(name, target)
+            h = ReplicaHealth(name, target, self.metrics)
             self._replicas[name] = h
         self._probe(h)
 
@@ -108,6 +127,7 @@ class QueryRouter:
             st = h.target.status()
             h.watermark = int(st.get("watermark", -1))
             h.inflight = int(st.get("inflight", 0))
+            h._g_inflight.set(h.inflight)
             h.last_heartbeat = time.monotonic()
             h.alive = True
             return True
@@ -130,6 +150,10 @@ class QueryRouter:
                 h.alive = False           # stale despite a late answer
                 ok = False
             out[h.name] = ok
+        top = max((h.watermark for h in targets if h.alive), default=-1)
+        for h in targets:
+            if h.alive:
+                h._g_lag.set(max(top - h.watermark, 0))
         return out
 
     def start_heartbeats(self, interval: float = 0.1) -> "QueryRouter":
@@ -195,9 +219,13 @@ class QueryRouter:
                 continue
             try:
                 h.inflight += 1
-                out = h.target.evaluate_many(queries, plan, **kw)
+                h._g_inflight.set(h.inflight)
+                with trace_span("route", replica=h.name,
+                                n=len(queries)):
+                    out = h.target.evaluate_many(queries, plan, **kw)
                 h.queries_routed += len(queries)
                 self.queries_routed += len(queries)
+                self._m_queries.inc(len(queries))
                 return out
             except WatermarkError:
                 # its real watermark regressed vs our cached view —
@@ -209,11 +237,14 @@ class QueryRouter:
                 h.failures += 1
                 h.last_error = f"{type(exc).__name__}: {exc}"
                 self.failovers += 1
+                self._m_failovers.inc()
                 continue
             finally:
                 h.inflight = max(h.inflight - 1, 0)
+                h._g_inflight.set(h.inflight)
         if shedding:
             self.shed += 1
+            self._m_shed.inc()
             raise OverloadError(
                 f"every replica covering t={t_need} is at "
                 f"max_inflight={self.max_inflight}")

@@ -28,8 +28,10 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 
+from repro.obs import clock
+from repro.obs.metrics import BYTE_BUCKETS, default_registry
+from repro.obs.trace import trace_span
 from repro.replica.faults import FaultInjector, TransportError
 
 __all__ = ["Transport", "LocalDirTransport", "FaultyTransport",
@@ -155,24 +157,25 @@ class SegmentPublisher:
         """One diff-ship pass; returns what moved (None when the source
         has no manifest yet)."""
         from repro.persist import manifest as mf
-        t0 = time.perf_counter()
+        t0 = clock.now()
         manifest = mf.read_manifest(self.source)
         if manifest is None:
             return None
         shipped_bytes = 0
         new_segments = 0
-        for entry in manifest["segments"]:
-            rel = entry["file"]
-            if rel in self._shipped:
-                continue
-            data = open(os.path.join(self.source, rel), "rb").read()
-            # verify before shipping: a corrupt source block must not
-            # propagate to every replica
-            mf.segment_block_from_bytes(data, ctx=rel,
-                                        expected_crc=entry.get("crc32"))
-            shipped_bytes += self._ship_file(rel, data)
-            self._shipped.add(rel)
-            new_segments += 1
+        with trace_span("publish.segments"):
+            for entry in manifest["segments"]:
+                rel = entry["file"]
+                if rel in self._shipped:
+                    continue
+                data = open(os.path.join(self.source, rel), "rb").read()
+                # verify before shipping: a corrupt source block must
+                # not propagate to every replica
+                mf.segment_block_from_bytes(
+                    data, ctx=rel, expected_crc=entry.get("crc32"))
+                shipped_bytes += self._ship_file(rel, data)
+                self._shipped.add(rel)
+                new_segments += 1
         wal_rel = mf.wal_name(int(manifest["wal_seq"]))
         wal_src = os.path.join(self.source, wal_rel)
         if os.path.exists(wal_src):
@@ -189,9 +192,20 @@ class SegmentPublisher:
                     os.remove(os.path.join(self.publish_root, name))
                 except OSError:
                     pass
+        seconds = clock.now() - t0
         rec = ShipRecord(epoch=epoch, wal_seq=int(manifest["wal_seq"]),
                          segments_shipped=new_segments,
                          bytes_shipped=shipped_bytes,
-                         seconds=time.perf_counter() - t0)
+                         seconds=seconds)
         self.history.append(rec)
+        reg = default_registry()
+        reg.counter("publish_passes_total",
+                    "diff-ship passes completed").inc()
+        reg.counter("publish_segments_total",
+                    "segment files shipped to the publish root"
+                    ).inc(new_segments)
+        reg.histogram("publish_bytes", "bytes moved per publish pass",
+                      buckets=BYTE_BUCKETS).observe(shipped_bytes)
+        reg.histogram("publish_seconds",
+                      "publish pass duration").observe(seconds)
         return rec

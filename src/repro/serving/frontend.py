@@ -27,9 +27,7 @@ that drains on the deadline; ``stop()`` joins it).
 """
 from __future__ import annotations
 
-import dataclasses
 import threading
-import time
 from collections import OrderedDict
 from concurrent.futures import Future
 from typing import Sequence
@@ -37,6 +35,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.plans import Query
+from repro.obs import clock
+from repro.obs.metrics import (MetricsRegistry, NullRegistry,
+                               default_registry)
+from repro.obs.trace import trace_span
 from repro.serving.ingest import LiveGraphStore, WatermarkError
 
 __all__ = ["MicroBatchFrontend", "FrontendStats", "OverloadError",
@@ -62,21 +64,74 @@ def query_cache_key(q: Query, layout: str | None) -> tuple:
             layout or "auto")
 
 
-@dataclasses.dataclass
 class FrontendStats:
-    submitted: int = 0
-    served: int = 0
-    batches: int = 0
-    cache_hits: int = 0
-    cache_misses: int = 0
-    coalesced_dupes: int = 0
-    max_batch_seen: int = 0
-    rejected: int = 0                    # bounced at the max_pending bound
-    shed: int = 0                        # dropped at dispatch: too old
-    max_pending_seen: int = 0
+    """Read-only view over a frontend's leaf metrics registry.
+
+    Source-compatible with the old plain-int dataclass: reads like
+    ``fe.stats.cache_hits`` resolve the live registry children.  All
+    mutation happens at the instrumented call sites through atomic
+    child operations — the view itself never writes, so there is no
+    read-modify-write window to lose increments in.  Each frontend
+    owns a fresh leaf registry, so these per-instance counts start at
+    zero per frontend lifetime while the same increments aggregate
+    into the parent (session/process) registry.
+
+    ``sync`` (when given) runs before every read: the frontend's
+    submit path accumulates its per-request counts as plain ints under
+    the queue lock it already holds (registry child ops per submit
+    would be measurable overhead on the serving hot path — the
+    bench_obs_overhead contract) and folds them into the registry at
+    every drain; the sync hook folds them on read too, so the view
+    stays exact at all times.
+    """
+
+    _COUNTERS = {
+        "submitted": ("frontend_submitted_total",
+                      "queries submitted"),
+        "served": ("frontend_served_total",
+                   "requests resolved by a dispatch (shed included)"),
+        "batches": ("frontend_batches_total",
+                    "dispatches to the engine"),
+        "cache_hits": ("frontend_cache_hits_total",
+                       "exact-result cache hits"),
+        "cache_misses": ("frontend_cache_misses_total",
+                         "exact-result cache misses"),
+        "coalesced_dupes": ("frontend_coalesced_dupes_total",
+                            "duplicate queries collapsed in a batch"),
+        "rejected": ("frontend_rejected_total",
+                     "submissions bounced at the max_pending bound"),
+        "shed": ("frontend_shed_total",
+                 "requests dropped at dispatch: aged past "
+                 "shed_after_ms"),
+    }
+    _GAUGES = {
+        "max_batch_seen": ("frontend_max_batch_seen",
+                           "largest batch dispatched"),
+        "max_pending_seen": ("frontend_max_pending_seen",
+                             "deepest queue observed"),
+    }
+
+    def __init__(self, registry, sync=None):
+        children = {}
+        for attr, (name, help_) in self._COUNTERS.items():
+            children[attr] = registry.counter(name, help_)
+        for attr, (name, help_) in self._GAUGES.items():
+            children[attr] = registry.gauge(name, help_)
+        self._children = children
+        self._sync = sync
+
+    def __getattr__(self, name):
+        children = self.__dict__.get("_children")
+        if children is not None and name in children:
+            sync = self.__dict__.get("_sync")
+            if sync is not None:
+                sync()
+            return children[name].value
+        raise AttributeError(name)
 
     def batch_occupancy(self) -> float:
-        return self.served / self.batches if self.batches else 0.0
+        batches = self.batches
+        return self.served / batches if batches else 0.0
 
 
 class MicroBatchFrontend:
@@ -86,7 +141,7 @@ class MicroBatchFrontend:
                  max_delay_ms: float = 2.0, cache_entries: int = 4096,
                  stale: str = "raise", layout: str | None = None,
                  max_pending: int | None = None, overload: str = "raise",
-                 shed_after_ms: float | None = None,
+                 shed_after_ms: float | None = None, metrics=None,
                  **evaluate_kw):
         self.live = live
         self.max_batch = int(max_batch)
@@ -111,12 +166,44 @@ class MicroBatchFrontend:
         self.shed_after_ms = (None if shed_after_ms is None
                               else float(shed_after_ms))
         self.evaluate_kw = evaluate_kw
-        self.stats = FrontendStats()
+        # per-instance leaf registry chained onto the session/process
+        # parent: ``fe.stats`` counts THIS frontend, the parent sees
+        # the aggregate.  A NullRegistry parent is adopted whole so
+        # "metrics off" really is off end to end.
+        parent = default_registry() if metrics is None else metrics
+        self.metrics = (parent if isinstance(parent, NullRegistry)
+                        else MetricsRegistry(parent=parent))
+        self.stats = FrontendStats(self.metrics, sync=self._sync_stats)
+        self._m = self.stats._children
+        self._m_qdepth = self.metrics.gauge(
+            "frontend_queue_depth", "requests waiting for dispatch")
+        self._m_wait = self.metrics.histogram(
+            "frontend_queue_wait_seconds",
+            "submit-to-dispatch wait per request")
         self._cache: OrderedDict[tuple, tuple[int, object]] = OrderedDict()
         self._queue: list[tuple[Query, tuple, Future, float]] = []
-        self._cv = threading.Condition()
+        self._cv = threading.Condition()   # RLock-backed: sync nests
+        # submit-path counts accumulate here as plain ints under
+        # ``_cv`` and fold into the registry at every drain / stats
+        # read — registry child ops per submit would tax the hot path
+        self._pend_counts = {"submitted": 0, "cache_hits": 0,
+                             "cache_misses": 0, "rejected": 0}
+        self._pend_maxdepth = 0
         self._thread: threading.Thread | None = None
         self._running = False
+
+    def _sync_stats(self) -> None:
+        """Fold the submit path's pending plain-int counts into the
+        registry (exactness on read; cheapness on write)."""
+        with self._cv:
+            for attr, n in self._pend_counts.items():
+                if n:
+                    self._m[attr].inc(n)
+                    self._pend_counts[attr] = 0
+            if self._pend_maxdepth:
+                self._m["max_pending_seen"].set_max(self._pend_maxdepth)
+                self._pend_maxdepth = 0
+            self._m_qdepth.set(len(self._queue))
 
     # ----------------------------------------------------------- cache
 
@@ -151,24 +238,25 @@ class MicroBatchFrontend:
         fut: Future = Future()
         key = query_cache_key(q, self.layout)
         with self._cv:
-            self.stats.submitted += 1
+            pend = self._pend_counts
+            pend["submitted"] += 1
             hit = self._cache_get(key)
             if hit is not None:
-                self.stats.cache_hits += 1
+                pend["cache_hits"] += 1
                 fut.set_result(hit)
                 return fut
-            self.stats.cache_misses += 1
+            pend["cache_misses"] += 1
             while (self.max_pending is not None
                    and len(self._queue) >= self.max_pending):
                 if self.overload == "raise":
-                    self.stats.rejected += 1
+                    pend["rejected"] += 1
                     raise OverloadError(
                         f"{len(self._queue)} requests already pending "
                         f"(max_pending={self.max_pending})")
                 self._cv.wait()          # paced: drain frees space
-            self._queue.append((q, key, fut, time.perf_counter()))
-            self.stats.max_pending_seen = max(self.stats.max_pending_seen,
-                                              len(self._queue))
+            self._queue.append((q, key, fut, clock.now()))
+            if len(self._queue) > self._pend_maxdepth:
+                self._pend_maxdepth = len(self._queue)
             self._cv.notify()
             full = len(self._queue) >= self.max_batch
         if full and self._thread is None:
@@ -211,15 +299,19 @@ class MicroBatchFrontend:
         with self._cv:
             batch, self._queue = (self._queue[:self.max_batch],
                                   self._queue[self.max_batch:])
+            self._sync_stats()           # fold submit-path counts
             self._cv.notify_all()        # wake blocked submitters
         if not batch:
             return 0
+        now = clock.now()
+        for entry in batch:
+            self._m_wait.observe(now - entry[3])
         if self.shed_after_ms is not None:
-            cutoff = time.perf_counter() - self.shed_after_ms / 1e3
+            cutoff = now - self.shed_after_ms / 1e3
             kept = []
             for entry in batch:
                 if entry[3] < cutoff:
-                    self.stats.shed += 1
+                    self._m["shed"].inc()
                     entry[2].set_exception(OverloadError(
                         f"request shed after waiting past "
                         f"{self.shed_after_ms}ms"))
@@ -257,12 +349,13 @@ class MicroBatchFrontend:
                 uniq[key] = []
                 uniq_qs.append(q)
             else:
-                self.stats.coalesced_dupes += 1
+                self._m["coalesced_dupes"].inc()
             uniq[key].append(fut)
         try:
-            results = self.live.evaluate_many(
-                uniq_qs, stale=self.stale, layout=self.layout,
-                **self.evaluate_kw)
+            with trace_span("frontend.dispatch", batch=len(uniq_qs)):
+                results = self.live.evaluate_many(
+                    uniq_qs, stale=self.stale, layout=self.layout,
+                    **self.evaluate_kw)
         except Exception as exc:            # noqa: BLE001 — fan out
             for futs in uniq.values():
                 for f in futs:
@@ -277,10 +370,9 @@ class MicroBatchFrontend:
                 self._cache_put(key, gen, value)
             for f in futs:
                 f.set_result(value)
-        self.stats.batches += 1
-        self.stats.served += len(batch)
-        self.stats.max_batch_seen = max(self.stats.max_batch_seen,
-                                        len(batch))
+        self._m["batches"].inc()
+        self._m["served"].inc(len(batch))
+        self._m["max_batch_seen"].set_max(len(batch))
         return len(batch) + n_shed
 
     def _scheduler(self) -> None:
@@ -292,14 +384,14 @@ class MicroBatchFrontend:
                     return
                 oldest = self._queue[0][3]
                 deadline = oldest + self.max_delay_ms / 1e3
-                now = time.perf_counter()
+                now = clock.now()
                 ready = (len(self._queue) >= self.max_batch
                          or now >= deadline)
                 if not ready:
                     self._cv.wait(timeout=deadline - now)
                     ready = bool(self._queue) and (
                         len(self._queue) >= self.max_batch
-                        or time.perf_counter() >= deadline)
+                        or clock.now() >= deadline)
             if ready:
                 self._drain_one_batch()
 

@@ -41,12 +41,15 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Iterable, Sequence
 
 from repro.core.engine import HistoricalQueryEngine, WatermarkError
 from repro.core.plans import Query
 from repro.core.store import Op, TemporalGraphStore
+from repro.obs import clock
+from repro.obs.metrics import default_registry
+from repro.obs.slowlog import SlowQueryLog
+from repro.obs.trace import trace_span
 from repro.serving.policy import WorkloadStats
 
 __all__ = ["LiveGraphStore", "SwapRecord", "WatermarkError"]
@@ -107,7 +110,8 @@ class LiveGraphStore:
                  group_pad_min: int = 1,
                  segment_device_budget: int | None = None,
                  store: TemporalGraphStore | None = None,
-                 pending: Sequence[Op] = ()):
+                 pending: Sequence[Op] = (), metrics=None,
+                 slow_query_ms: float | None = None):
         if store is None:
             store = TemporalGraphStore(n_cap, e_cap=e_cap, layout=layout)
         if segment_device_budget is not None:
@@ -165,6 +169,31 @@ class LiveGraphStore:
         # ships are exactly the just-persisted ones.
         self._swap_listeners: list = []
         self.listener_errors: list[BaseException] = []
+        self.metrics = default_registry() if metrics is None else metrics
+        self.slow_log = (SlowQueryLog(slow_query_ms)
+                         if slow_query_ms is not None else None)
+        # pre-created children: append() is the ingest hot path
+        reg = self.metrics
+        self._m_appended = reg.counter("serving_appended_ops_total",
+                                       "ops accepted into pending")
+        self._m_pending = reg.gauge("serving_pending_ops",
+                                    "ops buffered awaiting a swap")
+        self._m_watermark = reg.gauge("serving_watermark",
+                                      "t_served exactness watermark")
+        self._m_t_behind = reg.gauge("serving_t_behind",
+                                     "time units ingest leads serving")
+        self._m_swaps = reg.counter("serving_swaps_total",
+                                    "epoch swaps completed")
+        self._m_swap_s = reg.histogram("serving_swap_seconds",
+                                       "full epoch-swap duration")
+        self._m_phase = {
+            ph: reg.histogram("serving_swap_phase_seconds",
+                              "epoch-swap phase durations", phase=ph)
+            for ph in ("drain", "ingest", "rebalance", "seal",
+                       "checkpoint", "flip", "publish")}
+        self._m_listener_err = reg.counter(
+            "serving_listener_errors_total",
+            "swap listener callbacks that raised")
         self._engine = self._freeze()
 
     # ------------------------------------------------------------ write path
@@ -203,6 +232,10 @@ class LiveGraphStore:
                 persist.log_pending(batch)
             self._pending.extend(batch)
             self._t_append_last = t_last
+            self._m_appended.inc(len(batch))
+            self._m_pending.set(len(self._pending))
+            if batch:
+                self._m_t_behind.set(max(0, t_last - w))
             return len(batch)
 
     @property
@@ -240,6 +273,8 @@ class LiveGraphStore:
         # rebalance — without one, recording would grow it unboundedly
         eng.workload = self.workload if self.policy is not None else None
         eng.group_pad_min = self.group_pad_min
+        eng.bind_metrics(self.metrics)
+        eng.slow_log = self.slow_log
         return eng
 
     def swap(self, t_next: int | None = None) -> SwapRecord:
@@ -254,10 +289,17 @@ class LiveGraphStore:
         and later appends must use strictly later times.  Producers
         streaming mid-unit should batch appends at unit boundaries (or
         accept the force-close)."""
-        with self._swap_lock:
-            t0 = time.perf_counter()
+        with self._swap_lock, \
+                trace_span("swap", epoch=self.epoch + 1) as sp:
+            t0 = clock.now()
+
+            def _phase_done(name: str, since: float) -> float:
+                now = clock.now()
+                self._m_phase[name].observe(now - since)
+                return now
+
             persist = self.store.persist
-            with self._lock:
+            with trace_span("swap.drain"), self._lock:
                 pending, self._pending = self._pending, []
                 t_hi = max((o.t for o in pending),
                            default=self.store.t_cur)
@@ -273,44 +315,68 @@ class LiveGraphStore:
                     # same pending prefix, so their own WAL records
                     # are suppressed (the drain record subsumes them)
                     persist.log_drain(len(pending), target)
-            if persist is not None:
-                with persist.suspend_store_log():
+            t_ph = _phase_done("drain", t0)
+            with trace_span("swap.ingest", ops=len(pending)):
+                if persist is not None:
+                    with persist.suspend_store_log():
+                        n_acc = self.store.ingest(pending)
+                        self.store.advance_to(target)
+                else:
                     n_acc = self.store.ingest(pending)
                     self.store.advance_to(target)
-            else:
-                n_acc = self.store.ingest(pending)
-                self.store.advance_to(target)
+            t_ph = _phase_done("ingest", t_ph)
             added: tuple[int, ...] = ()
             evicted: tuple[int, ...] = ()
             if self.policy is not None:
-                res = self.policy.rebalance(self.store, self.workload)
+                with trace_span("swap.rebalance"):
+                    res = self.policy.rebalance(self.store,
+                                                self.workload)
                 added = tuple(res.added)
                 evicted = tuple(res.evicted)
-            eng = self._freeze()
+            t_ph = _phase_done("rebalance", t_ph)
+            # "seal" is the freeze: the epoch's tail becomes an
+            # immutable segment + the next engine's device state
+            with trace_span("swap.seal"):
+                eng = self._freeze()
+            t_ph = _phase_done("seal", t_ph)
             with self._lock:
                 if persist is not None:
                     # persist the manifest (sealed segments + anchors +
                     # rotated WAL) BEFORE the engine pointer flips: once
                     # a client can observe the new watermark, the state
                     # below it is durable
-                    persist.checkpoint(self.store, pending=self._pending)
-                self._engine = eng
-                self.epoch += 1
-                self.generation += 1
+                    with trace_span("swap.checkpoint"):
+                        persist.checkpoint(self.store,
+                                           pending=self._pending)
+                t_ph = _phase_done("checkpoint", t_ph)
+                with trace_span("swap.flip"):
+                    self._engine = eng
+                    self.epoch += 1
+                    self.generation += 1
+                self._m_watermark.set(int(eng.t_served))
+                self._m_pending.set(len(self._pending))
+            t_ph = _phase_done("flip", t_ph)
             rec = SwapRecord(
                 epoch=self.epoch, t_served=int(eng.t_served),
                 ops_absorbed=n_acc, ops_rejected=len(pending) - n_acc,
-                seconds=time.perf_counter() - t0,
+                seconds=clock.now() - t0,
                 anchors_added=added, anchors_evicted=evicted)
             self.swap_history.append(rec)
-            for fn in list(self._swap_listeners):
-                try:
-                    fn(rec)
-                except Exception as exc:  # noqa: BLE001 — a failed
-                    # publish must not take down serving; the writer
-                    # keeps its own durable copy and the listener runs
-                    # again at the next swap
-                    self.listener_errors.append(exc)
+            with trace_span("swap.publish",
+                            listeners=len(self._swap_listeners)):
+                for fn in list(self._swap_listeners):
+                    try:
+                        fn(rec)
+                    except Exception as exc:  # noqa: BLE001 — a failed
+                        # publish must not take down serving; the writer
+                        # keeps its own durable copy and the listener
+                        # runs again at the next swap
+                        self.listener_errors.append(exc)
+                        self._m_listener_err.inc()
+            _phase_done("publish", t_ph)
+            self._m_swaps.inc()
+            self._m_swap_s.observe(clock.now() - t0)
+            sp.set(ops=n_acc, t_served=int(eng.t_served))
             return rec
 
     def add_swap_listener(self, fn) -> None:

@@ -35,6 +35,7 @@ reconstruction of snapshots the policy decides to add.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 from typing import Sequence
 
@@ -49,12 +50,23 @@ class WorkloadStats:
     time endpoints here.  Weights are floats because epoch rollovers
     decay them (``decay``) instead of resetting — a time that was hot
     two epochs ago still counts, just less.
+
+    Bounded by construction (tests/test_obs.py): the histogram holds at
+    most ``max_times`` distinct times — when an epoch's queries touch
+    more, the lightest entries are pruned (their mass leaves ``total``
+    too), so a scan workload cannot grow the dict without limit between
+    rollovers.  ``queries_recorded`` decays at ``rollover`` along with
+    the weights: it is an exponentially-aged activity level (what the
+    policy would see as "recent traffic"), not a forever-monotonic
+    count — the registry's ``engine_queries_total`` is the monotonic
+    one.
     """
 
-    def __init__(self):
+    def __init__(self, *, max_times: int = 4096):
+        self.max_times = int(max_times)
         self._w: dict[int, float] = {}
         self.total = 0.0
-        self.queries_recorded = 0
+        self.queries_recorded = 0.0
         self._lock = threading.Lock()
 
     def record(self, times, weight: float = 1.0) -> None:
@@ -63,6 +75,16 @@ class WorkloadStats:
                 t = int(t)
                 self._w[t] = self._w.get(t, 0.0) + weight
                 self.total += weight
+            if len(self._w) > self.max_times:
+                # prune the lightest ~1/8 in one pass (amortized: the
+                # next few thousand inserts are bound-free) and keep
+                # ``total`` consistent with the surviving mass
+                drop = heapq.nsmallest(
+                    len(self._w) - self.max_times * 7 // 8,
+                    self._w.items(), key=lambda kv: (kv[1], kv[0]))
+                for t, w in drop:
+                    del self._w[t]
+                    self.total -= w
 
     def record_queries(self, queries) -> None:
         """Engine hook: record t_k (and t_l for range queries).
@@ -83,7 +105,8 @@ class WorkloadStats:
             if q.t_l is not None:
                 ts.append(q.t_l)
         self.record(ts)
-        self.queries_recorded += len(queries)
+        with self._lock:
+            self.queries_recorded += len(queries)
 
     def histogram(self) -> dict[int, float]:
         with self._lock:
@@ -107,11 +130,16 @@ class WorkloadStats:
         return total
 
     def rollover(self, decay: float) -> None:
-        """Epoch boundary: decay every weight, drop negligible ones."""
+        """Epoch boundary: decay every weight (and the activity level),
+        drop negligible ones.  This is the anti-overflow contract: with
+        a policy attached, every swap multiplies the whole histogram by
+        ``decay < 1``, so long-running servers converge to a bounded
+        steady state instead of accumulating forever."""
         with self._lock:
             self._w = {t: w * decay for t, w in self._w.items()
                        if w * decay > 1e-3}
             self.total = sum(self._w.values())
+            self.queries_recorded *= decay
 
 
 def _ops_between(t_sorted, t_a: int, t_b: int) -> int:
