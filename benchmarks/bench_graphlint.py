@@ -1,0 +1,85 @@
+"""graphlint throughput benchmark: whole-repo analysis wall time.
+
+The lint gate runs on every CI push, so its cost is part of the
+development loop's budget: the pass suite must stay cheap enough to
+run on the whole tree (src + scripts + benchmarks) in a couple of
+seconds, or people will start skipping it.  This bench times exactly
+what CI runs — ``analyze_paths`` over the default targets with every
+registered pass — and records files/sec (bigger is better, so the
+shared ``check_bench_baseline.py`` floor logic applies unchanged).
+
+The findings counts ride along in the artifact: the committed numbers
+double as a visible record of the repo's lint state at the time the
+artifact was refreshed (0 unsuppressed findings, suppressions with
+reasons).
+
+  PYTHONPATH=src python benchmarks/bench_graphlint.py [--smoke] [--out P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis.driver import analyze_paths  # noqa: E402
+from artifacts import make_artifact, write_artifact  # noqa: E402
+
+OUT_JSON = os.path.join(HERE, "BENCH_graphlint.json")
+TARGETS = ("src", "scripts", "benchmarks")
+
+
+def run_once() -> tuple[float, object]:
+    paths = [os.path.join(ROOT, t) for t in TARGETS
+             if os.path.isdir(os.path.join(ROOT, t))]
+    t0 = time.perf_counter()
+    report = analyze_paths(paths)
+    return time.perf_counter() - t0, report
+
+
+def measure(repeats: int) -> dict:
+    best = float("inf")
+    report = None
+    for _ in range(repeats):
+        dt, report = run_once()
+        best = min(best, dt)
+    return {
+        "wall_s": round(best, 4),
+        "files": report.files,
+        "files_per_sec": round(report.files / best, 1),
+        "findings": len(report.findings),
+        "suppressed": len(report.suppressed),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="single timed run (CI guard config)")
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args()
+
+    repeats = 1 if args.smoke else 5
+    smoke = measure(repeats=1)
+    results = {"smoke": smoke}
+    if not args.smoke:
+        results["full"] = measure(repeats=repeats)
+
+    artifact = make_artifact("graphlint", results, device_count=0)
+    write_artifact(args.out, artifact)
+    print(json.dumps(results, indent=2))
+    scale = results.get("full", smoke)
+    print(f"graphlint: {scale['files']} files in {scale['wall_s']}s "
+          f"({scale['files_per_sec']} files/s), "
+          f"{scale['findings']} findings, "
+          f"{scale['suppressed']} suppressed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

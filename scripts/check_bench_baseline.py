@@ -62,6 +62,13 @@ BENCHES = {
     "obs": ("benchmarks/bench_obs_overhead.py",
             "benchmarks/BENCH_obs_overhead.json",
             ("smoke", "qps_on")),
+    # whole-repo static-analysis throughput — the lint gate runs on
+    # every push, so a pass that goes accidentally quadratic (AST
+    # re-walks per rule, call-closure fixpoint blowup) shows up here
+    # before it shows up as a slow CI lane
+    "graphlint": ("benchmarks/bench_graphlint.py",
+                  "benchmarks/BENCH_graphlint.json",
+                  ("smoke", "files_per_sec")),
 }
 
 

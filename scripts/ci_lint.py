@@ -1,5 +1,6 @@
 """Lint gate: ruff (error-class checks) when available, else a
-bytecode-compile sweep — plus repo-specific rules that run either way.
+bytecode-compile sweep — plus the repo-native graphlint pass suite,
+which runs either way.
 
 CI installs ruff and gets the real check; a bare dev box without it
 still gets a syntax gate, so ``python scripts/ci_lint.py`` is runnable
@@ -7,10 +8,12 @@ anywhere.  The ruff selection is deliberately the error classes only
 (syntax errors, invalid comparisons/prints) — the seed predates any
 style linting and the gate must not paint the repo red retroactively.
 
-Repo rule: library code under ``src/repro`` must time through
-``repro.obs.clock.now`` (swappable in tests, one place to change), not
-bare ``time.perf_counter()``.  Only ``src/repro/obs/`` — where the
-clock is defined — may touch it directly.
+Repo-specific invariants (clock discipline, WAL-before-ack, lock
+ordering, epoch immutability, JAX hot-path hygiene) live in
+``repro.analysis`` and are enforced by delegating to
+``scripts/graphlint.py`` — one rule engine, one suppression syntax,
+one place to add passes.  Exit semantics are unchanged: nonzero when
+either the syntax gate or any unsuppressed graphlint finding fails.
 """
 from __future__ import annotations
 
@@ -25,43 +28,27 @@ TARGETS = ["src", "tests", "scripts", "benchmarks", "examples"]
 RUFF_SELECT = "E9,F63,F7"
 
 
-def check_clock_discipline() -> int:
-    """Reject bare ``time.perf_counter(`` in src/repro outside obs/."""
-    src = os.path.join(ROOT, "src", "repro")
-    allowed = os.path.join(src, "obs") + os.sep
-    bad: list[str] = []
-    for dirpath, _dirs, files in os.walk(src):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            if path.startswith(allowed):
-                continue
-            with open(path, encoding="utf-8") as fh:
-                for lineno, line in enumerate(fh, 1):
-                    if "time.perf_counter(" in line:
-                        rel = os.path.relpath(path, ROOT)
-                        bad.append(f"{rel}:{lineno}: bare time.perf_counter"
-                                   "() — use repro.obs.clock.now()")
-    for msg in bad:
-        print(msg, flush=True)
-    return 1 if bad else 0
+def run_graphlint() -> int:
+    """Delegate the repo-native invariant checks to graphlint."""
+    cmd = [sys.executable, os.path.join(ROOT, "scripts", "graphlint.py")]
+    print("+", " ".join(cmd), flush=True)
+    return subprocess.run(cmd).returncode
 
 
 def main() -> int:
-    rc_clock = check_clock_discipline()
+    rc_graphlint = run_graphlint()
     targets = [os.path.join(ROOT, t) for t in TARGETS
                if os.path.isdir(os.path.join(ROOT, t))]
     ruff = shutil.which("ruff")
     if ruff:
         cmd = [ruff, "check", "--select", RUFF_SELECT, *targets]
         print("+", " ".join(cmd), flush=True)
-        return subprocess.run(cmd).returncode or rc_clock
+        return subprocess.run(cmd).returncode or rc_graphlint
     print("ruff not installed — falling back to compileall (syntax only)",
           flush=True)
     ok = all(compileall.compile_dir(t, quiet=1, force=True)
              for t in targets)
-    ok = ok and rc_clock == 0
+    ok = ok and rc_graphlint == 0
     print("lint OK" if ok else "lint FAILED", flush=True)
     return 0 if ok else 1
 

@@ -1,0 +1,21 @@
+"""graphlint: repo-native static analysis + runtime sanitizers.
+
+The stack's correctness invariants — WAL-before-ack, frozen-epoch
+immutability, lock-guarded shared state, device values staying on
+device — hold by convention; this package checks them mechanically.
+
+* ``repro.analysis.driver.analyze_paths`` — run every registered pass
+  over a file tree (what ``scripts/graphlint.py`` and CI call).
+* ``repro.analysis.registry`` — the pass registry (``@register``).
+* ``repro.analysis.lockdep`` — the opt-in runtime lock-order sanitizer
+  (enable with ``pytest --lockdep`` or ``GRAPHLINT_LOCKDEP=1``).
+"""
+from repro.analysis.base import Finding, LintPass, ParsedFile
+from repro.analysis.driver import Report, analyze_files, analyze_paths
+from repro.analysis.registry import all_passes, create_passes, register
+
+__all__ = [
+    "Finding", "LintPass", "ParsedFile", "Report",
+    "analyze_files", "analyze_paths",
+    "all_passes", "create_passes", "register",
+]

@@ -1,0 +1,8 @@
+"""Built-in graphlint passes.  Importing this package registers every
+pass with ``repro.analysis.registry`` (each module's ``@register``
+decorator fires at import)."""
+from repro.analysis.passes import clock_discipline  # noqa: F401
+from repro.analysis.passes import epoch_immutability  # noqa: F401
+from repro.analysis.passes import jax_hotpath  # noqa: F401
+from repro.analysis.passes import lock_discipline  # noqa: F401
+from repro.analysis.passes import wal_ordering  # noqa: F401

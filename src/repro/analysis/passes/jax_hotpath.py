@@ -1,0 +1,234 @@
+"""host-sync / jit-unhashable-default: JAX hot-path hygiene.
+
+A single ``float(jnp_value)`` in the dispatch path stalls the device
+pipeline: conversion forces a blocking device→host transfer, turning an
+async program launch into a synchronous round trip (the PR 3 edge-path
+speedups came in part from deleting exactly these).  And a jitted
+function with an unhashable (mutable) default argument either crashes
+at trace time (static arg) or silently retraces per call.
+
+Rules, scoped to the modules where device values live —
+``core/engine.py``, ``core/distributed.py``, ``kernels/``, ``models/``
+and ``runtime/``:
+
+* ``host-sync`` — per-function taint analysis.  Sources: calls rooted
+  at ``jnp``/``lax``/``pl``/``pltpu``, parameters of jit-decorated
+  functions, and attribute reads that read as device arrays (delta/
+  graph array fields).  Attribute access, subscripts, arithmetic and
+  assignment propagate taint.  Sinks: ``float()``/``int()``/``bool()``
+  /``np.asarray()``/``np.array()`` over a tainted value, and
+  ``.item()``/``.tolist()`` on a tainted receiver.
+
+* ``jit-unhashable-default`` — a function decorated with ``jax.jit``
+  (bare or via ``functools.partial``) whose signature carries a
+  mutable default (list/dict/set literal or constructor).
+
+Heuristic (no type inference); suppress justified one-time host copies
+with ``# graphlint: ignore[host-sync] <why>``.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (Finding, LintPass, ParsedFile,
+                                 attr_chain)
+from repro.analysis.registry import register
+
+_SCOPE_SUFFIXES = ("core/engine.py", "core/distributed.py")
+_SCOPE_DIRS = ("kernels", "models", "runtime")
+
+#: call roots whose results live on device
+_DEVICE_ROOTS = frozenset({"jnp", "lax", "pl", "pltpu"})
+#: jax.* constructors that return device values (jax.jit handled apart)
+_JAX_DEVICE_FUNCS = frozenset({"vmap", "pmap", "grad", "value_and_grad",
+                               "checkpoint", "remat"})
+
+#: (receiver hint, attr) pairs that read as device-array fields
+_DEVICE_RECEIVERS = frozenset({"delta", "graph", "anchor", "snap",
+                               "current"})
+_DEVICE_ATTRS = frozenset({"op", "u", "v", "slot", "t", "adj", "emask",
+                           "eu", "ev", "deg", "mask"})
+
+_CONVERTERS = frozenset({"float", "int", "bool", "complex"})
+_MUTABLE_DEFAULTS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+_MUTABLE_CTORS = frozenset({"list", "dict", "set", "bytearray"})
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    chain = attr_chain(dec)
+    if chain in (("jax", "jit"), ("jit",)):
+        return True
+    if isinstance(dec, ast.Call):
+        fchain = attr_chain(dec.func)
+        if fchain in (("jax", "jit"), ("jit",)):
+            return True
+        if fchain and fchain[-1] == "partial" and dec.args:
+            return attr_chain(dec.args[0]) in (("jax", "jit"), ("jit",))
+    return False
+
+
+class _Taint:
+    """Flow-insensitive per-function taint: names assigned (anywhere in
+    the function) from a device-valued expression are tainted."""
+
+    def __init__(self, fn: ast.FunctionDef, jitted: bool):
+        self.names: set[str] = set()
+        if jitted:
+            args = fn.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                self.names.add(a.arg)
+            for a in (args.vararg, args.kwarg):
+                if a is not None:
+                    self.names.add(a.arg)
+        # fixpoint over assignments
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(fn):
+                targets: list[ast.AST] = []
+                value = None
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AnnAssign) \
+                        and node.value is not None:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                if value is None or not self.tainted(value):
+                    continue
+                for t in targets:
+                    for name in _target_names(t):
+                        if name not in self.names:
+                            self.names.add(name)
+                            changed = True
+
+    def tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if chain and chain[0] in _DEVICE_ROOTS:
+                return True
+            if len(chain) == 2 and chain[0] == "jax" \
+                    and chain[1] in _JAX_DEVICE_FUNCS:
+                return True
+            # method call on a tainted receiver stays on device
+            # (x.sum(), x.astype(...)) — except the sinks themselves
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr not in ("item", "tolist") \
+                    and self.tainted(node.func.value):
+                return True
+            return False
+        if isinstance(node, ast.Attribute):
+            chain = attr_chain(node)
+            if chain:
+                hints = [p for p in chain[:-1] if p != "self"]
+                if hints and hints[-1] in _DEVICE_RECEIVERS \
+                        and chain[-1] in _DEVICE_ATTRS:
+                    return True
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            return (self.tainted(node.left)
+                    or any(self.tainted(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.tainted(e) for e in node.elts)
+        return False
+
+
+def _target_names(t: ast.AST):
+    if isinstance(t, ast.Name):
+        yield t.id
+    elif isinstance(t, (ast.Tuple, ast.List)):
+        for el in t.elts:
+            yield from _target_names(el)
+    elif isinstance(t, ast.Starred):
+        yield from _target_names(t.value)
+
+
+@register
+class JaxHotPathPass(LintPass):
+    name = "jax-hotpath"
+    description = ("implicit device→host syncs (float/int/bool/"
+                   "np.asarray/.item on JAX values) and unhashable "
+                   "jit default args in engine/distributed/kernels/"
+                   "models/runtime")
+    rules = ("host-sync", "jit-unhashable-default")
+
+    def applies(self, pf: ParsedFile) -> bool:
+        if any(pf.endswith(sfx) for sfx in _SCOPE_SUFFIXES):
+            return True
+        return pf.in_dir(*_SCOPE_DIRS) and "repro" in pf.relparts
+
+    def check_file(self, pf: ParsedFile) -> list[Finding]:
+        out: list[Finding] = []
+        for fn in ast.walk(pf.tree):
+            if not isinstance(fn, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                continue
+            jitted = any(_is_jit_decorator(d) for d in fn.decorator_list)
+            if jitted:
+                out.extend(self._check_defaults(pf, fn))
+            out.extend(self._check_syncs(pf, fn, jitted))
+        return out
+
+    def _check_defaults(self, pf: ParsedFile,
+                        fn: ast.FunctionDef) -> list[Finding]:
+        out = []
+        defaults = list(fn.args.defaults) + [
+            d for d in fn.args.kw_defaults if d is not None]
+        for d in defaults:
+            bad = isinstance(d, _MUTABLE_DEFAULTS) or (
+                isinstance(d, ast.Call)
+                and attr_chain(d.func) in
+                tuple((n,) for n in _MUTABLE_CTORS))
+            if bad:
+                out.append(self.finding(
+                    "jit-unhashable-default", pf, d.lineno,
+                    f"jitted function {fn.name}() has a mutable "
+                    "default argument — unhashable as a static arg "
+                    "and a retrace-per-call trap otherwise; use None "
+                    "or a tuple"))
+        return out
+
+    def _check_syncs(self, pf: ParsedFile, fn: ast.FunctionDef,
+                     jitted: bool) -> list[Finding]:
+        out = []
+        taint = _Taint(fn, jitted)
+        where = "inside jitted " if jitted else "in "
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            # float(x) / int(x) / bool(x) / np.asarray(x) on device vals
+            conv = None
+            if len(chain) == 1 and chain[0] in _CONVERTERS:
+                conv = chain[0]
+            elif chain in (("np", "asarray"), ("np", "array"),
+                           ("numpy", "asarray"), ("numpy", "array")):
+                conv = ".".join(chain)
+            if conv and node.args and taint.tainted(node.args[0]):
+                out.append(self.finding(
+                    "host-sync", pf, node.lineno,
+                    f"{conv}() over a device value {where}"
+                    f"{fn.name}() forces a blocking device→host sync "
+                    "— keep it on device (jnp) or hoist the transfer "
+                    "off the hot path"))
+                continue
+            # .item() / .tolist() on a tainted receiver
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist") \
+                    and taint.tainted(node.func.value):
+                out.append(self.finding(
+                    "host-sync", pf, node.lineno,
+                    f".{node.func.attr}() on a device value {where}"
+                    f"{fn.name}() forces a blocking device→host sync"))
+        return out

@@ -793,7 +793,7 @@ class HistoricalQueryEngine:
         elif t_host is not None:
             self.t_host = t_host
         else:
-            self.t_host = np.asarray(delta.t)
+            self.t_host = np.asarray(delta.t)  # graphlint: ignore[host-sync] one-time planning copy at engine build, off the hot path
         n_cap = (current.n_cap if current is not None
                  else current_edge.n_cap)
         # edge-only engines register the edge current as the -1 anchor

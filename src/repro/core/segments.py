@@ -411,10 +411,13 @@ class SegmentedDeltaView:
             return None
         c = self._node_ops_sum
         if c is None:
-            c = np.zeros((self.n_cap,), np.int64)
-            for s in self.segments:
-                c = c + s.node_counts(self.n_cap)
-            self._node_ops_sum = c  # benign race: idempotent value
+            with self._lock:
+                c = self._node_ops_sum
+                if c is None:
+                    c = np.zeros((self.n_cap,), np.int64)
+                    for s in self.segments:
+                        c = c + s.node_counts(self.n_cap)
+                    self._node_ops_sum = c
         return int(c[int(v)])
 
     def window_range(self, t_lo, t_hi=None) -> tuple[int, int]:

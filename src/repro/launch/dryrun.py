@@ -19,7 +19,7 @@ the EXPERIMENTS.md tables are generated from these.
 import argparse
 import dataclasses
 import json
-import time
+from repro.obs import clock
 import traceback
 
 import jax
@@ -175,7 +175,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         rules_name = DEFAULT_RULES.get(arch)
     if rules_name and rules_name != "baseline":
         rules.update(RULESETS[rules_name])
-    t0 = time.time()
+    t0 = clock.now()
 
     with logical_rules(**rules):
         if shape.kind == "train":
@@ -217,9 +217,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
         with mesh_context(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
-            t_lower = time.time() - t0
+            t_lower = clock.now() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = clock.now() - t0 - t_lower
 
     from repro.models.blocks import n_groups as _ng
     cost = compiled.cost_analysis() or {}

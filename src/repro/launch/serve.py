@@ -11,7 +11,7 @@ queries).
 from __future__ import annotations
 
 import argparse
-import time
+from repro.obs import clock
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +37,11 @@ def main():
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
-    t0 = time.time()
+    t0 = clock.now()
     store = build_store(args.nodes,
                         EvolutionParams(m_attach=4, lam_extra=1.0,
                                         lam_remove=1.0), seed=args.seed)
-    print(f"built store in {time.time()-t0:.1f}s:", store.stats())
+    print(f"built store in {clock.now()-t0:.1f}s:", store.stats())
 
     mesh = D.graph_mesh()
     g = D.shard_graph(store.current, mesh)
@@ -52,10 +52,10 @@ def main():
                      .astype(np.int32))
     ts = jnp.asarray(rng.integers(1, store.t_cur, args.queries)
                      .astype(np.int32))
-    t0 = time.time()
+    t0 = clock.now()
     deg = D.dist_batch_point_degree(mesh, g, d, vs, ts, store.t_cur)
     deg.block_until_ready()
-    t_batch = time.time() - t0
+    t_batch = clock.now() - t0
     print(f"served {args.queries} point-degree queries in "
           f"{t_batch*1e3:.1f} ms "
           f"({t_batch/args.queries*1e6:.0f} us/query)")
@@ -71,9 +71,9 @@ def main():
         Query("diff", "global", "avg_degree", t_k=int(store.t_cur * 0.3),
               t_l=int(store.t_cur * 0.9)),
     ]
-    t0 = time.time()
+    t0 = clock.now()
     res = serve_batch(store, mixed)
-    print(f"mixed plans in {(time.time()-t0)*1e3:.1f} ms:",
+    print(f"mixed plans in {(clock.now()-t0)*1e3:.1f} ms:",
           [np.round(np.asarray(r), 3).tolist() for r in res])
 
 

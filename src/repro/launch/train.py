@@ -9,7 +9,7 @@ CPU-scale usage (the e2e example wraps this):
 from __future__ import annotations
 
 import argparse
-import time
+from repro.obs import clock
 
 import jax
 import jax.numpy as jnp
@@ -62,10 +62,10 @@ def train(cfg, tcfg: TrainConfig, scfg: ShardingConfig, *,
         for step in range(start_step, tcfg.total_steps):
             if injector is not None:
                 injector.check(step)
-            t0 = time.time()
+            t0 = clock.now()
             batch = data.batch_at(step)
             state, metrics = step_fn(state, batch)
-            dt_ms = (time.time() - t0) * 1e3
+            dt_ms = (clock.now() - t0) * 1e3
             if step % log_every == 0 or step == tcfg.total_steps - 1:
                 m = {k: float(jax.device_get(v))
                      for k, v in metrics.items()}
@@ -111,13 +111,13 @@ def main():
                        warmup_steps=max(args.steps // 10, 1),
                        param_dtype="float32")
     scfg = ShardingConfig()
-    t0 = time.time()
+    t0 = clock.now()
     state, history, store = train(
         cfg, tcfg, scfg, ckpt_dir=args.ckpt,
         ckpt_every=args.ckpt_every, policy=DeltaPolicy(kind=args.policy))
     first = history.rows["loss"][0]
     last = history.rows["loss"][-1]
-    print(f"trained {args.steps} steps in {time.time()-t0:.1f}s | "
+    print(f"trained {args.steps} steps in {clock.now()-t0:.1f}s | "
           f"loss {first:.4f} -> {last:.4f}")
     if store is not None:
         print("checkpoint storage:", store.storage_bytes())

@@ -361,13 +361,21 @@ class MicroBatchFrontend:
                 for f in futs:
                     f.set_exception(exc)
             return len(batch) + n_shed
+        resolved = []
         for q, (key, futs), r in zip(uniq_qs, uniq.items(), results):
             value = np.asarray(r)
             value = value.item() if value.ndim == 0 else value
             t_hi = q.t_k if q.t_l is None else max(q.t_k, q.t_l)
-            if t_hi <= w:
-                # only exact (within-watermark) results are cacheable
-                self._cache_put(key, gen, value)
+            resolved.append((key, value, t_hi, futs))
+        # cache writes go under the queue lock: submitters read the
+        # OrderedDict under _cv, and dict reshaping during a lock-free
+        # write is a real data race (graphlint: unlocked-mutation)
+        with self._cv:
+            for key, value, t_hi, _futs in resolved:
+                if t_hi <= w:
+                    # only exact (within-watermark) results cacheable
+                    self._cache_put(key, gen, value)
+        for _key, value, _t_hi, futs in resolved:
             for f in futs:
                 f.set_result(value)
         self._m["batches"].inc()

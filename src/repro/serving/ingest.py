@@ -383,7 +383,8 @@ class LiveGraphStore:
         """Register a post-swap callback ``fn(SwapRecord)``.  Runs on
         the swap thread after checkpoint + engine flip; exceptions are
         collected in ``listener_errors`` rather than raised."""
-        self._swap_listeners.append(fn)
+        with self._lock:
+            self._swap_listeners.append(fn)
 
     def swap_async(self) -> threading.Thread:
         """Run one epoch swap on a daemon thread; the frozen epoch

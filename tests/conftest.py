@@ -19,6 +19,39 @@ from repro.core.generate import EvolutionParams, build_store, generate_ops
 from repro.core.store import TemporalGraphStore
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--lockdep", action="store_true", default=False,
+        help="enable the runtime lock-order sanitizer "
+             "(repro.analysis.lockdep) for every test")
+
+
+def _lockdep_requested(config):
+    return (config.getoption("--lockdep")
+            or os.environ.get("GRAPHLINT_LOCKDEP") == "1")
+
+
+@pytest.fixture(autouse=True)
+def _lockdep_sanitizer(request):
+    """Opt-in lock-order sanitizer: ``pytest --lockdep`` (or
+    GRAPHLINT_LOCKDEP=1) patches threading.Lock/RLock so any
+    AB/BA lock-order inversion raises LockOrderError deterministically
+    instead of deadlocking intermittently.  The order graph resets per
+    test so one test's ordering can't poison another's."""
+    if not _lockdep_requested(request.config):
+        yield
+        return
+    from repro.analysis import lockdep
+    if lockdep.enabled():  # a test drives enable/disable itself
+        yield
+        return
+    lockdep.enable()
+    try:
+        yield
+    finally:
+        lockdep.disable()
+
+
 @pytest.fixture(scope="session")
 def small_history():
     """A small evolving graph + its brute-force oracle."""
